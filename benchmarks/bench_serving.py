@@ -1,0 +1,35 @@
+"""Beyond-paper benchmark: end-to-end serving engine throughput (CPU, reduced
+configs) — exercises the persistent-state slot machinery the paper's §VIII
+names as future work (batched multi-layer serving)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro import configs
+from repro.models import lm
+from repro.serving.engine import DecodeEngine, Request
+
+
+def run():
+    for arch in ("qwen3-next-gdn", "mamba2-1.3b"):
+        cfg = configs.get_arch(arch).reduced()
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        eng = DecodeEngine(cfg, params, max_slots=4, max_len=64)
+        reqs = [Request(rid=i, prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=8) for i in range(8)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        done = eng.run_until_done()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in done)
+        emit(f"serving/{arch}", dt / max(toks, 1) * 1e6,
+             f"tokens={toks};ticks={eng.ticks};slots=4;reduced_cpu")
+
+
+if __name__ == "__main__":
+    run()

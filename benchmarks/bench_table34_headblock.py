@@ -1,0 +1,76 @@
+"""Paper Tables III+IV — head-level parallelism design space (H_iter sweep).
+
+TPU analogue: the Pallas gdn_decode kernel's ``head_block`` (v-heads per
+grid step).  For each head_block in {2, 4, 8, 16} we report:
+  * VMEM working set of one grid step (the resource axis — Table VI role)
+  * modeled per-token latency on v5e: the kernel streams the 2 MB state
+    once each way; grid steps pipeline (Pallas double-buffers HBM<->VMEM),
+    so latency ~ max(stream time, per-step compute) + pipeline fill
+  * CPU wall-time of the interpret-mode kernel (correctness-path sanity,
+    NOT a performance number)
+plus the paper's own FPGA cycle model for comparison.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (HBM_BW, PEAK_FLOPS, STATE_BYTES, VMEM_BYTES,
+                               H_K, H_V, D_HEAD, emit)
+
+
+def vmem_working_set(hb: int) -> int:
+    """One grid step: state block (in+out) + q/k/v slices + double buffer."""
+    state_blk = hb * D_HEAD * D_HEAD * 4
+    qkv = (2 * (hb // 2) + hb) * D_HEAD * 4 + 2 * hb * 4
+    return 2 * state_blk + 2 * qkv          # x2: Pallas double buffering
+
+
+def modeled_latency_us(hb: int) -> float:
+    """v5e: one pass of 2 MB state each way, pipelined over Hv/hb steps."""
+    n_steps = H_V // hb
+    stream = 2 * STATE_BYTES / HBM_BW                    # read + write
+    per_step_flops = hb * 7 * D_HEAD * D_HEAD
+    compute = n_steps * per_step_flops / PEAK_FLOPS
+    fill = (2 * STATE_BYTES / n_steps) / HBM_BW          # first block load
+    return max(stream, compute) * 1e6 + fill * 1e6
+
+
+def paper_fpga_model(h_iter: int) -> float:
+    """Paper Eq. 12 @300 MHz: L = (32/H_iter) * 2106 cycles + T_load."""
+    t_load_cycles = {2: 8800, 4: 9400, 8: 10554, 16: 10600}[h_iter]
+    cycles = (H_V // h_iter) * 2106 + t_load_cycles
+    return cycles * 3.33e-3                              # us @300 MHz
+
+
+def run():
+    from repro.kernels import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    q = jax.random.normal(ks[0], (1, H_K, D_HEAD))
+    k = jax.random.normal(ks[1], (1, H_K, D_HEAD))
+    v = jax.random.normal(ks[2], (1, H_V, D_HEAD))
+    S = (jax.random.normal(ks[3], (1, H_V, D_HEAD, D_HEAD)) * 0.1)
+    g = jax.nn.sigmoid(jax.random.normal(ks[4], (1, H_V)))
+    b = jax.nn.sigmoid(jax.random.normal(ks[5], (1, H_V)))
+    o_ref, S_ref = ref.gdn_decode_ref(q, k, v, S, g, b)
+
+    for hb in (2, 4, 8, 16):
+        o, S_new = ops.gdn_decode(q, k, v, S, g, b, head_block=hb)
+        ok = bool(jnp.allclose(o, o_ref, rtol=2e-4, atol=2e-4))
+        vmem = vmem_working_set(hb)
+        lat = modeled_latency_us(hb)
+        fpga = paper_fpga_model(hb)
+        emit(f"table34/head_block_{hb}", lat,
+             f"modeled_v5e_us={lat:.2f};vmem_kb={vmem/1024:.0f};"
+             f"vmem_frac={vmem/VMEM_BYTES:.4f};paper_fpga_us={fpga:.1f};"
+             f"allclose={ok}")
+
+    # paper claim: all configs far below VMEM/BRAM limits; state streams at
+    # full HBM bandwidth so head_block only moves the (tiny) fill term.
+    emit("table34/note", 0.0,
+         "tpu_state_streams_once_per_token;paper_optimum_Hiter8=63.2us;"
+         "v5e_model_is_flat_because_HBM_stream_dominates")
+
+
+if __name__ == "__main__":
+    run()

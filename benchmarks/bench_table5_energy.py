@@ -1,0 +1,44 @@
+"""Paper Table V — per-token energy comparison (modeled).
+
+The paper measures 9.96 W on the placed FPGA and 99.8 mJ/token on the GPU
+reference.  Without hardware we report a transparent energy MODEL for the
+paper's single GDN layer at batch 1 (constants in benchmarks/common.py):
+
+  E = HBM_bytes * e_hbm + FLOPs * e_flop + VMEM_bytes * e_vmem
+
+for (a) GPU-style HBM round-trip decode, (b) TPU fused decode (state
+streamed once each way), (c) the paper's FPGA numbers verbatim for
+reference.  The claim being reproduced is the *ordering and scale*: removing
+state round-trips is worth ~2x energy, and the paper's full-persistence adds
+the rest of its 62x via low static power — not reachable by a von-Neumann
+accelerator model and noted as such."""
+from __future__ import annotations
+
+from benchmarks.common import (E_FLOP, E_HBM_PER_BYTE, E_VMEM_PER_BYTE,
+                               LAYER_FLOPS, STATE_BYTES, emit)
+
+TOKEN_IO = 48.5e3     # paper: ~48.5 KB per token
+
+
+def run():
+    flops = LAYER_FLOPS
+    # (a) GPU-style: 3 state reads + 1 write + token IO through HBM
+    e_gpu = (4 * STATE_BYTES + TOKEN_IO) * E_HBM_PER_BYTE + flops * E_FLOP
+    # (b) TPU fused: 1 read + 1 write + token IO
+    e_tpu = (2 * STATE_BYTES + TOKEN_IO) * E_HBM_PER_BYTE + flops * E_FLOP
+    # (c) idealized persistence: state never leaves on-chip SRAM
+    e_persist = (TOKEN_IO * E_HBM_PER_BYTE + flops * E_FLOP
+                 + 2 * STATE_BYTES * E_VMEM_PER_BYTE)
+    emit("table5/gpu_roundtrip_uJ", 0.0, f"energy_uJ={e_gpu*1e6:.2f}")
+    emit("table5/tpu_fused_uJ", 0.0,
+         f"energy_uJ={e_tpu*1e6:.2f};vs_gpu={e_gpu/e_tpu:.2f}x")
+    emit("table5/persistent_ideal_uJ", 0.0,
+         f"energy_uJ={e_persist*1e6:.2f};vs_gpu={e_gpu/e_persist:.2f}x")
+    emit("table5/paper_reference", 0.0,
+         "fpga_1.61mJ_full_model_token;gpu_99.8mJ;62x;"
+         "note=paper numbers are full-token wall-power, model is per-layer "
+         "dynamic energy — ordering reproduced, magnitude not comparable")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Table VI — resource utilization across design points.
+
+FPGA BRAM/DSP/FF/LUT -> TPU analogue: VMEM working set and MXU issue
+occupancy per gdn_decode head_block, plus the whole-model persistent-state
+budget per assigned subquadratic arch (the 'does the state fit on chip'
+precondition, Eq. 8)."""
+from __future__ import annotations
+
+from benchmarks.common import VMEM_BYTES, emit
+from benchmarks.bench_table34_headblock import vmem_working_set
+from repro import configs
+
+
+def arch_state_bytes(cfg) -> int:
+    total = 0
+    for kind in cfg.layer_kinds:
+        if kind == "gdn":
+            total += cfg.gdn_v_heads * cfg.gdn_head_dim ** 2 * 4
+        elif kind == "ssm":
+            nheads = cfg.ssm_d_inner // cfg.ssm_headdim
+            total += nheads * cfg.ssm_d_state * cfg.ssm_headdim * 4
+        elif kind == "rglru":
+            total += cfg.rglru_width * 4
+    return total
+
+
+def run():
+    for hb in (2, 4, 8, 16):
+        ws = vmem_working_set(hb)
+        emit(f"table6/vmem_head_block_{hb}", 0.0,
+             f"vmem_kb={ws/1024:.0f};frac_of_vmem={ws/VMEM_BYTES:.4f};"
+             f"paper_bram_frac={{2:0.12,4:0.25,8:0.25,16:0.25}}[{hb}]")
+    # Eq. 8 precondition per arch: recurrent state per layer vs VMEM
+    for name in ("qwen3-next-gdn", "mamba2-1.3b", "recurrentgemma-2b"):
+        cfg = configs.get_arch(name)
+        per_layer = arch_state_bytes(cfg) / max(
+            1, sum(k in ("gdn", "ssm", "rglru") for k in cfg.layer_kinds))
+        emit(f"table6/state_{name}", 0.0,
+             f"state_per_layer_mb={per_layer/2**20:.2f};"
+             f"fits_vmem={per_layer < VMEM_BYTES};"
+             f"total_model_state_mb={arch_state_bytes(cfg)/2**20:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Shared benchmark utilities + v5e hardware model."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+# TPU v5e (the target platform for all modeled numbers)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+VMEM_BYTES = 128 * 2 ** 20   # ~128 MB per core
+
+# energy model constants (order-of-magnitude, documented in EXPERIMENTS.md):
+# HBM access energy ~10 pJ/bit (HBM2e-class), MXU bf16 ~0.4 pJ/FLOP,
+# on-chip SRAM ~1 pJ/bit.  Used only for the Table-V analogue.
+E_HBM_PER_BYTE = 10e-12 * 8
+E_FLOP = 0.4e-12
+E_VMEM_PER_BYTE = 1e-12 * 8
+
+# paper's GDN layer (Qwen3-Next config)
+H_K = 16
+H_V = 32
+D_HEAD = 128
+STATE_BYTES = H_V * D_HEAD * D_HEAD * 4          # 2 MB fp32
+LAYER_FLOPS = H_V * (7 * D_HEAD * D_HEAD + 8 * D_HEAD)   # ~3.7 MFLOP
+
+
+def timeit(fn, *args, iters=20, warmup=3):
+    """Median wall time of a jitted callable (CPU measurement)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

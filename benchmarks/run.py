@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (0.0 us for analytic rows).
+
+  Fig. 1    -> bench_fig1_intensity   (decode arithmetic intensity)
+  Table II  -> bench_table2_profile   (per-token profile, fused vs naive)
+  Tables III/IV -> bench_table34_headblock (head_block design sweep)
+  Table V   -> bench_table5_energy    (modeled energy per token)
+  Table VI  -> bench_table6_resources (VMEM/state-fit budget)
+  extra     -> bench_serving          (continuous-batching engine)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_fig1_intensity, bench_table2_profile,
+                            bench_table34_headblock, bench_table5_energy,
+                            bench_table6_resources, bench_serving)
+    mods = [bench_fig1_intensity, bench_table2_profile,
+            bench_table34_headblock, bench_table5_energy,
+            bench_table6_resources, bench_serving]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in mods:
+        try:
+            mod.run()
+        except Exception:            # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+            print(f"{mod.__name__},nan,ERROR")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's primitive end to end in 60 lines.
+
+1. Run one fused GDN decode step (paper Alg. 2) against the naive Alg. 1
+   and show they agree while touching the state half as often.
+2. Train a small Qwen3-Next-style hybrid (3:1 GDN:attention) for a few
+   hundred steps on synthetic data and watch the loss drop.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import gdn
+from repro import configs
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def decode_step_demo():
+    print("== paper Alg. 1 vs Alg. 2 (one value-head, d=128) ==")
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (128,))
+    k = jax.random.normal(ks[1], (128,))
+    k = k / jnp.linalg.norm(k)
+    v = jax.random.normal(ks[2], (128,))
+    S = jax.random.normal(ks[3], (128, 128)) * 0.1
+    g, beta = jnp.float32(0.95), jnp.float32(0.8)
+
+    o_naive, S_naive = gdn.decode_step_naive(q, k, v, S, g, beta)
+    o_fused, S_fused = gdn.decode_step_fused(q, k, v, S, g, beta)
+    print(f"  max|o_naive - o_fused|  = {jnp.max(jnp.abs(o_naive - o_fused)):.2e}")
+    print(f"  max|S_naive - S_fused|  = {jnp.max(jnp.abs(S_naive - S_fused)):.2e}")
+    print("  naive: 3 passes over S;  fused: 1 read + 1 write (Eq. 13)")
+
+
+def train_demo(steps=300):
+    print(f"\n== training qwen3-next-gdn (reduced) for {steps} steps ==")
+    cfg = configs.get_arch("qwen3-next-gdn").reduced()
+    tc = TrainerConfig(steps=steps, seq_len=64, global_batch=4,
+                       peak_lr=3e-3, warmup_steps=20, log_every=50)
+    trainer = Trainer(cfg, tc)
+    history = trainer.run()
+    for step, loss in history:
+        print(f"  step {step:4d}  loss {loss:.3f}")
+    assert history[-1][1] < history[0][1], "loss should decrease"
+    print("  loss decreased — the gated delta rule is learning.")
+
+
+if __name__ == "__main__":
+    decode_step_demo()
+    train_demo()

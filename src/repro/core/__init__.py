@@ -1,0 +1,26 @@
+from repro.core import gdn, intensity
+from repro.core.gdn import (
+    gates,
+    log_gate,
+    decode_step_naive,
+    decode_step_fused,
+    ssd_decode_step,
+    prefill_sequential,
+    prefill_chunkwise,
+    gdn_decode,
+    gdn_prefill,
+)
+
+__all__ = [
+    "gdn",
+    "intensity",
+    "gates",
+    "log_gate",
+    "decode_step_naive",
+    "decode_step_fused",
+    "ssd_decode_step",
+    "prefill_sequential",
+    "prefill_chunkwise",
+    "gdn_decode",
+    "gdn_prefill",
+]

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gdn
+
+
+def gdn_decode_ref(q, k, v, S, g, beta, *, scale=None, delta_rule=True):
+    """Oracle for kernels.gdn_decode. Shapes as in gdn_decode_pallas."""
+    B, Hk, d_k = q.shape
+    Hv = v.shape[1]
+    R = Hv // Hk
+    if scale is None:
+        scale = (1.0 / math.sqrt(d_k)) if delta_rule else 1.0
+    qe, ke = gdn.gva_expand(q, R), gdn.gva_expand(k, R)
+    qe = qe.astype(jnp.float32)
+    ke = ke.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    Sf = S.astype(jnp.float32)
+    if delta_rule:
+        fn = lambda q1, k1, v1, S1, g1, b1: gdn.decode_step_fused(
+            q1, k1, v1, S1, g1, b1, scale=scale)
+        o, S_new = jax.vmap(jax.vmap(fn))(qe, ke, vf, Sf, g, beta)
+    else:
+        fn = lambda q1, k1, v1, S1, g1: gdn.ssd_decode_step(
+            q1, k1, v1, S1, g1, scale=scale)
+        o, S_new = jax.vmap(jax.vmap(fn))(qe, ke, vf, Sf, g)
+    return o.astype(v.dtype), S_new.astype(S.dtype)
+
+
+def gdn_prefill_ref(q, k, v, log_g, beta, S0, *, scale=None, delta_rule=True):
+    """Oracle for kernels.gdn_prefill: sequential scan per (BH,) row.
+
+    q, k: (BH, T, d_k); v: (BH, T, d_v); log_g, beta: (BH, T);
+    S0: (BH, d_k, d_v).
+    """
+    d_k = q.shape[-1]
+    if scale is None:
+        scale = (1.0 / math.sqrt(d_k)) if delta_rule else 1.0
+    fn = lambda q1, k1, v1, lg1, b1, S1: gdn.prefill_sequential(
+        q1.astype(jnp.float32), k1.astype(jnp.float32),
+        v1.astype(jnp.float32), lg1.astype(jnp.float32),
+        b1.astype(jnp.float32), S1.astype(jnp.float32),
+        scale=scale, delta_rule=delta_rule)
+    O, S = jax.vmap(fn)(q, k, v, log_g, beta, S0)
+    return O.astype(v.dtype), S.astype(S0.dtype)
+
+
+def attn_decode_ref(q, k_cache, v_cache, length, *, scale=None, window=None):
+    """Oracle for kernels.attn_decode: dense softmax with masking."""
+    B, Hq, d = q.shape
+    _, Hkv, T, _ = k_cache.shape
+    Hg = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qf = q.reshape(B, Hkv, Hg, d).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = scale * jnp.einsum("bhgd,bhtd->bhgt", qf, kf)
+    pos = jnp.arange(T)[None, None, None, :]
+    valid = pos < length[:, None, None, None]
+    if window is not None:
+        valid = jnp.logical_and(
+            valid, pos >= (length[:, None, None, None] - window))
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p, vf)
+    return o.reshape(B, Hq, d).astype(q.dtype)

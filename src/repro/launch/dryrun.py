@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything else follows.
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.configs.base import SHAPES, shape_applicable   # noqa: E402
+from repro.launch import hlo_cost              # noqa: E402
+from repro.launch import steps as steps_mod    # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.parallel import sharding as sharding_mod       # noqa: E402
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (shared by the collective term)
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 'useful' FLOPs for the cell (6*N*D train / 2*N_active per
+    generated or prefilled token; MoE counts active params only)."""
+    n_active = sharding_mod.estimate_params(cfg)
+    if cfg.moe_experts:
+        # replace full expert count with the active top-k experts
+        expert = 3 * cfg.d_model * cfg.d_ff
+        n_active -= cfg.n_layers * cfg.moe_experts * expert
+        n_active += cfg.n_layers * cfg.moe_top_k * expert
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = configs.get_arch(arch)
+    # §Perf variant knobs (hillclimb A/B runs)
+    if os.environ.get("REPRO_STATE_DTYPE"):
+        cfg = cfg.replace(state_dtype=os.environ["REPRO_STATE_DTYPE"])
+    if os.environ.get("REPRO_NO_HEAD_PAD"):
+        cfg = cfg.replace(n_heads_pad=0, n_kv_heads_pad=0)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    lowered = steps_mod.lower_cell(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    t0 = time.time()
+    cost = hlo_cost.analyze(
+        hlo, skip_layout_fusions=bool(os.environ.get("REPRO_TPU_ADJUSTED")))
+    t_cost = time.time() - t0
+
+    flops = cost["flops"]
+    bytes_acc = cost["bytes"]
+    coll = cost["collectives"]
+    mflops = model_flops(cfg, shape)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "cost_s": round(t_cost, 1),
+        "memory": {
+            # peak = max live bytes per device (the HBM-fit criterion);
+            # temp = sum of all temp allocations over the program (>= peak)
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        },
+        "fits_hbm_16g": bool(
+            getattr(mem, "peak_memory_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0) < 16e9),
+        # hlo_cost analyses the post-SPMD per-device module
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll,
+        "model_flops_global": mflops,
+        "model_vs_hlo_flops": (mflops / (flops * n_chips)
+                               if flops else 0.0),
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll["total"] / ICI_BW,
+        },
+    }
+    r = result["roofline"]
+    dom = max(r, key=r.get)
+    result["roofline"]["dominant"] = dom
+    return result
+
+
+def cell_path(arch, shape_name, multi_pod):
+    mesh = "multi" if multi_pod else "single"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(configs.ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                path = cell_path(arch, shape_name, multi_pod)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {path}")
+                    continue
+                tag = (f"{arch} x {shape_name} x "
+                       f"{'multi' if multi_pod else 'single'}")
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape_name, multi_pod)
+                except Exception as e:   # noqa: BLE001
+                    failures += 1
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi_pod else "single",
+                           "status": "error", "error": str(e)[-4000:],
+                           "traceback": traceback.format_exc()[-6000:]}
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                if res["status"] == "ok":
+                    r = res["roofline"]
+                    print(f"[ok] {tag}: compute {r['compute_s']*1e3:.2f}ms "
+                          f"memory {r['memory_s']*1e3:.2f}ms collective "
+                          f"{r['collective_s']*1e3:.2f}ms -> {r['dominant']}"
+                          f" (compile {res['compile_s']}s)", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,314 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a lax.scan over
+40 layers reports 1/40th of the real FLOPs/bytes/collective traffic.  This
+module re-derives the three roofline inputs from the compiled per-device HLO
+with while-loop bodies scaled by their ``known_trip_count``:
+
+  * flops            — 2 * prod(result dims) * prod(contracting dims) per
+                       `dot` (MXU work; elementwise VPU flops are ignored —
+                       they are bandwidth-bound and show up in bytes)
+  * bytes            — sum of operand + result sizes of every top-level
+                       instruction in control-flow computations (roofline
+                       convention: no inter-op cache reuse), excluding
+                       shape-only ops and CPU-only `convert` artifacts
+  * collective bytes — operand sizes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       also trip-scaled; per collective kind
+
+Fusion-internal instructions contribute FLOPs (dots) but not bytes (they
+never touch HBM); while/conditional bodies contribute both, times their
+multiplier.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|"
+                       r"u8|pred|s4|u4)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->", re.M)
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_OPCODE = re.compile(r"^(?:\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_OPND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n[":\s]+\"?(\d+)')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "broadcast", "iota", "reshape", "convert",
+               "after-all", "partition-id", "replica-id"}
+
+# Fusions composed only of layout/convert ops. XLA:CPU materializes fp32
+# upcasts + transposes of bf16 dot operands; TPU's MXU consumes bf16 with
+# native layouts, so these fusions would not exist in the TPU program.
+# Skipped only when skip_layout_fusions=True (the "TPU-adjusted" §Perf
+# accounting — the default stays CPU-conservative).
+_LAYOUT_TOKENS = {"transpose", "copy", "bitcast", "convert", "broadcast",
+                  "reshape", "slice", "fusion", "wrapped"}
+
+
+def _is_layout_fusion(name: str) -> bool:
+    tokens = {t for t in name.replace(".", "_").split("_") if t
+              and not t.isdigit()}
+    return bool(tokens) and tokens <= _LAYOUT_TOKENS
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES.get(dt, 4)
+    return total
+
+
+def _result_dims(text: str) -> List[List[int]]:
+    return [[int(d) for d in dims.split(",") if d]
+            for _, dims in _SHAPE_RE.findall(text)]
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_text: str
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            current = Computation(hdr.group(1))
+            comps[current.name] = current
+            continue
+        if current is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        op_m = _OPCODE.match(rest)
+        opcode = op_m.group(1) if op_m else rest.split("(")[0].split()[-1]
+        # result type text = everything before the opcode
+        result_text = rest[: rest.find(opcode)] if opcode in rest else rest
+        inner = rest.split("(", 1)
+        operands = _OPND.findall(inner[1].split(")", 1)[0]) \
+            if len(inner) > 1 else []
+        current.instrs.append(Instr(
+            name=name, opcode=opcode,
+            result_bytes=_shape_bytes(result_text),
+            result_text=result_text, operands=operands, line=line))
+    return comps
+
+
+def _entry_name(hlo: str, comps: Dict[str, Computation]) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    return m.group(1) if m else next(iter(comps))
+
+
+def _multipliers(hlo: str, comps: Dict[str, Computation]
+                 ) -> Tuple[Dict[str, float], Dict[str, bool]]:
+    """comp -> execution multiplier; comp -> is fusion-internal."""
+    entry = _entry_name(hlo, comps)
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    internal: Dict[str, bool] = {c: False for c in comps}
+    mult[entry] = 1.0
+    # Callees are defined before callers in HLO text, so visiting
+    # computations in reverse definition order is a valid topological order
+    # (each caller's multiplier is final before its edges propagate).
+    order = list(comps)
+    if entry in order:
+        order.remove(entry)
+    order = [entry] + list(reversed(order))
+    for cur in order:
+        cm = mult[cur]
+        if cm == 0.0 and cur != entry:
+            continue
+        for ins in comps[cur].instrs:
+            callees: List[Tuple[str, float, bool]] = []
+            if ins.opcode == "while":
+                trip = 1.0
+                t = _TRIP.search(ins.line)
+                if t:
+                    trip = float(t.group(1))
+                b = _BODY.search(ins.line)
+                c = _COND.search(ins.line)
+                if b:
+                    callees.append((b.group(1), trip, False))
+                if c:
+                    callees.append((c.group(1), trip + 1, False))
+            elif ins.opcode == "fusion":
+                f = _CALLS.search(ins.line)
+                if f:
+                    callees.append((f.group(1), 1.0, True))
+            elif ins.opcode == "conditional":
+                br = _BRANCHES.search(ins.line)
+                if br:
+                    for b in _OPND.findall(br.group(1)):
+                        callees.append((b, 1.0, False))
+            else:
+                t = _TO_APPLY.search(ins.line)
+                if t:   # reduce/sort/collective lambdas: scalar-level, skip
+                    callees.append((t.group(1), 0.0, True))
+                c = _CALLS.search(ins.line)
+                if c:
+                    callees.append((c.group(1), 1.0, ins.opcode == "fusion"))
+            for callee, factor, is_internal in callees:
+                if callee not in comps:
+                    continue
+                mult[callee] = mult.get(callee, 0.0) + cm * factor
+                internal[callee] = internal.get(callee, False) or \
+                    is_internal or internal.get(cur, False)
+    return mult, internal
+
+
+def _dot_flops(ins: Instr, shape_of: Dict[str, int],
+               dims_of: Dict[str, List[List[int]]]) -> float:
+    res_dims = _result_dims(ins.result_text)
+    n_out = 1
+    for dlist in res_dims:
+        for d in dlist:
+            n_out *= d
+    contract = _CONTRACT.search(ins.line)
+    k = 1
+    if contract and ins.operands:
+        lhs = ins.operands[0]
+        lhs_dims = dims_of.get(lhs)
+        if lhs_dims:
+            flat = lhs_dims[0]
+            for idx in contract.group(1).split(","):
+                if idx and int(idx) < len(flat):
+                    k *= flat[int(idx)]
+    return 2.0 * n_out * k
+
+
+def analyze(hlo: str, skip_layout_fusions: bool = False) -> dict:
+    comps = parse_module(hlo)
+    mult, internal = _multipliers(hlo, comps)
+
+    shape_of: Dict[str, int] = {}
+    dims_of: Dict[str, List[List[int]]] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shape_of[ins.name] = ins.result_bytes
+            dims_of[ins.name] = _result_dims(ins.result_text)
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll: Dict[str, float] = {}
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        fusion_internal = internal.get(comp.name, False)
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, shape_of, dims_of)
+            base = ins.opcode.replace("-start", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                nbytes = sum(shape_of.get(o, 0) for o in ins.operands)
+                coll[base] = coll.get(base, 0.0) + m * nbytes
+            if fusion_internal or ins.opcode in _SKIP_BYTES:
+                continue
+            if (skip_layout_fusions and ins.opcode == "fusion"
+                    and _is_layout_fusion(ins.name)):
+                continue
+            if ins.opcode == "dynamic-update-slice":
+                # in-place RMW of the updated region only (XLA aliases the
+                # big buffer through loop carries; counting it as operand
+                # traffic overstates decode-cache updates by ~the number of
+                # layers)
+                upd = (shape_of.get(ins.operands[1], 0)
+                       if len(ins.operands) > 1 else ins.result_bytes)
+                nbytes = 2 * upd
+            elif ins.opcode == "dynamic-slice":
+                nbytes = 2 * ins.result_bytes      # read slice + write out
+            elif ins.opcode == "scatter":
+                upd = (shape_of.get(ins.operands[2], 0)
+                       if len(ins.operands) > 2 else ins.result_bytes)
+                nbytes = 2 * upd
+            elif (ins.opcode == "fusion"
+                  and "dynamic-update-slice" in ins.name):
+                # fused in-place update: the aliased buffer appears as both
+                # the largest operand and the result; real traffic is the
+                # non-aliased inputs, twice (RMW)
+                ops = [shape_of.get(o, 0) for o in ins.operands]
+                nbytes = 2 * (sum(ops) - (max(ops) if ops else 0))
+            else:
+                nbytes = ins.result_bytes + sum(shape_of.get(o, 0)
+                                                for o in ins.operands)
+            bytes_ += m * nbytes
+    coll["total"] = sum(coll.values())
+    return {"flops": flops, "bytes": bytes_, "collectives": coll}
+
+
+def top_collectives(hlo: str, n: int = 20) -> list:
+    """Largest (multiplier x operand bytes) collectives — hillclimbing aid."""
+    comps = parse_module(hlo)
+    mult, _ = _multipliers(hlo, comps)
+    shape_of = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shape_of[ins.name] = ins.result_bytes
+    rows = []
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            base = ins.opcode.replace("-start", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                nbytes = sum(shape_of.get(o, 0) for o in ins.operands)
+                rows.append((m * nbytes, m, base, ins.line.strip()[:160]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def top_bytes(hlo: str, n: int = 25) -> list:
+    """Largest (multiplier x bytes) contributors — hillclimbing aid."""
+    comps = parse_module(hlo)
+    mult, internal = _multipliers(hlo, comps)
+    shape_of = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shape_of[ins.name] = ins.result_bytes
+    rows = []
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0 or internal.get(comp.name, False):
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in _SKIP_BYTES:
+                continue
+            nbytes = ins.result_bytes + sum(shape_of.get(o, 0)
+                                            for o in ins.operands)
+            rows.append((m * nbytes, m, ins.opcode, comp.name,
+                         ins.line.strip()[:140]))
+    rows.sort(reverse=True)
+    return rows[:n]

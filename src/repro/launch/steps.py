@@ -1,0 +1,186 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+Shared by the dry-run (lower/compile only — no allocation) and the real
+launchers.  For each shape kind:
+
+  train_4k     -> train_step(state, batch): fwd + bwd + AdamW update
+  prefill_32k  -> prefill_step(params, caches, tokens|embeds)
+  decode_*     -> serve_step(params, caches, tokens): ONE new token against
+                  a cache of seq_len (donated caches: the persistent state)
+
+Optimizer-state dtype policy scales with arch size (bf16 / factored moments
+for the 30B..480B archs) — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.models import lm
+from repro.optim import optimizers as opt
+from repro.parallel import sharding
+from repro.runtime import trainer as trainer_mod
+
+
+def adamw_config_for(cfg: ArchConfig) -> opt.AdamWConfig:
+    n = sharding.estimate_params(cfg)
+    if n > 100e9:
+        # Adafactor regime: factored v, no momentum — the only state that
+        # fits v5e HBM at ~0.5T params (arctic-480b); see DESIGN.md §4
+        return opt.AdamWConfig(moment_dtype="bfloat16", factored=True,
+                               momentum=False)
+    if n > 15e9:
+        return opt.AdamWConfig(moment_dtype="bfloat16")
+    return opt.AdamWConfig()
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                     budget_bytes: float = 3e9) -> int:
+    """Gradient-accumulation factor sizing the per-layer activation
+    checkpoints (B_local * T * d * 2 bytes * L) to ~3 GB of v5e HBM."""
+    dp = sharding.axis_size(mesh, sharding.dp_axes(mesh))
+    b_local = max(1, shape.global_batch // dp)
+    ckpt = b_local * shape.seq_len * cfg.d_model * 2 * cfg.n_layers
+    mb = 1
+    while ckpt / mb > budget_bytes and mb < b_local:
+        mb *= 2
+    return mb
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _tree_sds(tree):
+    return jax.tree.map(lambda x: _sds(x.shape, x.dtype), tree)
+
+
+# ------------------------------------------------------------------ specs
+
+def params_sds(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda k: lm.init_lm(k, cfg), jax.random.PRNGKey(0))
+
+
+def state_sds(cfg: ArchConfig, tc):
+    return jax.eval_shape(
+        lambda k: trainer_mod.init_state(k, cfg, tc), jax.random.PRNGKey(0))
+
+
+def caches_sds(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: lm.init_caches(cfg, batch, max_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    B, T = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.act_dtype)
+    if shape.kind == "train":
+        batch = {"labels": _sds((B, T), jnp.int32)}
+        if cfg.frontend_stub:
+            batch["embeds"] = _sds((B, T, cfg.d_model), dt)
+        else:
+            batch["tokens"] = _sds((B, T), jnp.int32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        spec = {"caches": caches_sds(cfg, B, T)}
+        if cfg.frontend_stub:
+            spec["embeds"] = _sds((B, T, cfg.d_model), dt)
+        else:
+            spec["tokens"] = _sds((B, T), jnp.int32)
+        return spec
+    # decode: one new token against a cache of seq_len
+    return {"caches": caches_sds(cfg, B, T),
+            "tokens": _sds((B,), jnp.int32)}
+
+
+# ------------------------------------------------------------------ cells
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, kwargs_of_SDS, in_shardings, out_shardings, donate)."""
+    fsdp = sharding.needs_fsdp(cfg, mesh)
+    pspecs = lambda tree: sharding.params_specs(                  # noqa: E731
+        cfg, tree, fsdp, mesh)
+    ns = lambda spec: jax.tree.map(                               # noqa: E731
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P))
+    spec = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tc = trainer_mod.TrainerConfig(
+            steps=1000, seq_len=shape.seq_len,
+            global_batch=shape.global_batch, adamw=adamw_config_for(cfg),
+            microbatches=microbatches_for(cfg, shape, mesh),
+            accum_dtype=("bfloat16"
+                         if sharding.estimate_params(cfg) > 100e9
+                         else "float32"))
+        st = state_sds(cfg, tc)
+        ps = pspecs(st["params"])
+        st_spec = {
+            "params": ps,
+            "opt": {"mu": trainer_mod.opt_moment_specs(st["opt"]["mu"], ps),
+                    "count": P()},
+            "step": P(),
+        }
+        b_spec = sharding.batch_specs(mesh, spec["batch"])
+        step = trainer_mod.build_train_step(
+            cfg, tc, dp_axes=sharding.dp_axes(mesh))
+        args = (st, spec["batch"])
+        in_sh = (ns(st_spec), ns(b_spec))
+        out_sh = (ns(st_spec), None)
+        return step, args, in_sh, out_sh, (0,)
+
+    pr = params_sds(cfg)
+    ps = pspecs(pr)
+    c_spec = sharding.cache_specs(cfg, mesh, spec["caches"],
+                                  shape.global_batch)
+    if shape.kind == "prefill":
+        tok_key = "embeds" if cfg.frontend_stub else "tokens"
+        tok_spec = sharding.batch_specs(mesh, {tok_key: spec[tok_key]})
+
+        dp_act = sharding.dp_axes(mesh)
+        if shape.global_batch % sharding.axis_size(mesh, dp_act) != 0:
+            dp_act = None
+
+        def prefill_step(params, caches, tok):
+            kw = {"embeds": tok} if cfg.frontend_stub else {"tokens": tok}
+            return lm.prefill(params, cfg, caches, dp_axes=dp_act, **kw)
+
+        args = (pr, spec["caches"], spec[tok_key])
+        dp = sharding.dp_axes(mesh)
+        logits_spec = sharding.fit_spec(
+            P(dp, "model"), (shape.global_batch, cfg.vocab), mesh)
+        in_sh = (ns(ps), ns(c_spec), ns(tok_spec[tok_key]))
+        out_sh = (ns(logits_spec), ns(c_spec))
+        return prefill_step, args, in_sh, out_sh, (1,)
+
+    # decode / serve step
+    dp_act = sharding.dp_axes(mesh)
+    if shape.global_batch % sharding.axis_size(mesh, dp_act) != 0:
+        dp_act = None
+
+    def serve_step(params, caches, tokens):
+        return lm.decode_step(params, cfg, tokens, caches, dp_axes=dp_act)
+
+    dp = sharding.dp_axes(mesh)
+    tok_spec = sharding.fit_spec(P(dp), (shape.global_batch,), mesh)
+    logits_spec = sharding.fit_spec(
+        P(dp, "model"), (shape.global_batch, cfg.vocab), mesh)
+    args = (pr, spec["caches"], spec["tokens"])
+    in_sh = (ns(ps), ns(c_spec), ns(tok_spec))
+    out_sh = (ns(logits_spec), ns(c_spec))
+    return serve_step, args, in_sh, out_sh, (1,)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+    return lowered

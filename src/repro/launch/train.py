@@ -1,0 +1,58 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-next-gdn \
+        --steps 200 --global-batch 8 --seq-len 256 --ckpt-dir /tmp/ckpt
+
+On a real cluster each host runs this under its own process index with
+jax.distributed; on this CPU container it runs the same code path on the
+local device mesh (reduced configs via --reduced).  Fault tolerance,
+checkpoint/resume, WSD/cosine schedules and straggler logging come from
+repro.runtime.trainer.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+from repro import configs
+from repro.optim import optimizers as opt
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced same-family config (CPU-sized); full "
+                         "configs are exercised via the dry-run")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    cfg = configs.get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    # minicpm trains with WSD per its paper
+    schedule = "wsd" if cfg.name == "minicpm-2b" else args.schedule
+    tc = TrainerConfig(
+        steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, microbatches=args.microbatches,
+        peak_lr=args.lr, schedule=schedule, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, tc)
+    history = trainer.run()
+    for step, loss in history:
+        print(f"step {step:6d} loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

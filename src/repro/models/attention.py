@@ -1,0 +1,246 @@
+"""GQA / sliding-window attention with blockwise (flash-style) compute.
+
+Three entry points per layer:
+  * ``attn_train``   — full-sequence causal (optionally windowed) attention,
+                       blockwise online-softmax scan over KV blocks: never
+                       materializes the (T, T) score matrix (required for the
+                       32k prefill and 4k train shapes at production batch).
+  * ``attn_prefill`` — attn_train + returns the populated KV cache.
+  * ``attn_decode``  — one new token against the cache. Pure-JAX einsum path
+                       (GSPMD-shardable over batch / heads / cache length) or
+                       the Pallas flash-decode kernel (`use_pallas`).
+
+KV cache layout: (B, Hkv, Tmax, hd) + scalar lengths (B,).  For SWA archs the
+cache is a rolling buffer of ``window`` positions (O(1) memory at 500k ctx).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, Hkv, Tmax, hd)
+    v: jax.Array          # (B, Hkv, Tmax, hd)
+    length: jax.Array     # (B,) int32 — tokens seen so far (may exceed Tmax
+                          # for rolling SWA caches)
+
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim,
+                   dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads, head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_kv_heads, head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_kv_heads, head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads, head_dim, d_model))
+               * ((n_heads * head_dim) ** -0.5)).astype(dtype),
+    }
+
+
+def _qkv(p, x, positions, rope_theta):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"]).astype(x.dtype)
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"]).astype(x.dtype)
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"]).astype(x.dtype)
+    q = layers.apply_rope(q, positions, rope_theta)
+    k = layers.apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, *, window=None, block_kv=512):
+    """Causal (optionally sliding-window) attention, scanned over KV blocks.
+
+    q: (B, T, Hq, hd); k, v: (B, T, Hkv, hd).  Returns (B, T, Hq, hd).
+    Memory per scan step: O(T * block_kv) scores instead of O(T^2).
+    """
+    B, T, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    bkv = min(block_kv, T)
+    n_blocks = T // bkv
+    assert T % bkv == 0
+
+    qg = q.reshape(B, T, Hkv, G, hd)
+    kb = k.reshape(B, n_blocks, bkv, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, bkv, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.arange(T)
+
+    # remat the per-block step: without this, the backward pass stacks every
+    # block's (B, T, H, bkv) score tensor as a saved residual — measured at
+    # 38 GB/layer/device on the train_4k cells (see EXPERIMENTS.md §Perf i1).
+    @jax.checkpoint
+    def step(carry, inp):
+        m, l, acc = carry                    # (B,T,Hkv,G) / same / (...,hd)
+        kv_idx, k_blk, v_blk = inp           # k_blk: (B, bkv, Hkv, hd)
+        # bf16 inputs with fp32 accumulation — no materialized fp32 k/v
+        s = scale * jnp.einsum("bthgd,bshd->bthgs", qg, k_blk,
+                               preferred_element_type=jnp.float32)
+        kv_pos = kv_idx * bkv + jnp.arange(bkv)
+        mask = q_pos[:, None] >= kv_pos[None, :]            # causal
+        if window is not None:
+            mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        acc_new = corr[..., None] * acc + jnp.einsum(
+            "bthgs,bshd->bthgd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, T, Hkv, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, T, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, T, Hkv, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_blocks), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, T, Hq, hd).astype(q.dtype)
+
+
+def _apply_head_mask(o, head_mask):
+    """Zero the TP-padding heads (see ArchConfig.head_mask) — keeps padded
+    attention mathematically identical to the unpadded model."""
+    if head_mask is None:
+        return o
+    shape = (1,) * (o.ndim - 2) + (o.shape[-2], 1)
+    return o * head_mask.reshape(shape).astype(o.dtype)
+
+
+def attn_train(p, x, *, rope_theta=10000.0, window=None, block_kv=512,
+               use_flash_kernel=False, head_mask=None):
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q, k, v = _qkv(p, x, positions, rope_theta)
+    if use_flash_kernel:
+        # Pallas fused path: scores stay in VMEM, HBM traffic O(B·T·H·d)
+        from repro.kernels.flash_attn import flash_attention
+        o = flash_attention(q, k, v, min(512, T), min(512, T), window,
+                            jax.default_backend() != "tpu")
+    else:
+        o = blockwise_attention(q, k, v, window=window, block_kv=block_kv)
+    o = _apply_head_mask(o, head_mask)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"]).astype(x.dtype)
+
+
+def init_kv_cache(batch, n_kv_heads, head_dim, max_len, *, window=None,
+                  dtype=jnp.float32):
+    size = max_len if window is None else min(window, max_len)
+    return KVCache(
+        k=jnp.zeros((batch, n_kv_heads, size, head_dim), dtype),
+        v=jnp.zeros((batch, n_kv_heads, size, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def attn_prefill(p, x, cache: KVCache, *, rope_theta=10000.0, window=None,
+                 block_kv=512, head_mask=None):
+    """Run full attention over the prompt and populate the cache.
+
+    Assumes all sequences share length T (ragged prompts are left-padded by
+    the serving engine).  Rolling SWA caches keep the last `size` tokens.
+    """
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q, k, v = _qkv(p, x, positions, rope_theta)
+    o = blockwise_attention(q, k, v, window=window, block_kv=block_kv)
+    size = cache.k.shape[2]
+    kh = k.transpose(0, 2, 1, 3)          # (B, Hkv, T, hd)
+    vh = v.transpose(0, 2, 1, 3)
+    if T >= size:
+        # keep the last `size` tokens, arranged so token p sits at slot
+        # p mod size (required by the rolling insert in _cache_insert).
+        new_k = jnp.roll(kh[:, :, -size:, :], T % size, axis=2)
+        new_v = jnp.roll(vh[:, :, -size:, :], T % size, axis=2)
+    else:
+        new_k = jax.lax.dynamic_update_slice(
+            cache.k, kh.astype(cache.k.dtype), (0, 0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache.v, vh.astype(cache.v.dtype), (0, 0, 0, 0))
+    new_cache = KVCache(new_k.astype(cache.k.dtype),
+                        new_v.astype(cache.v.dtype),
+                        cache.length + T)
+    o = _apply_head_mask(o, head_mask)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"]).astype(x.dtype)
+    return out, new_cache
+
+
+def _cache_insert(cache: KVCache, k_t, v_t):
+    """Insert one token at the rolling position. k_t: (B, Hkv, hd)."""
+    size = cache.k.shape[2]
+    slot = jnp.mod(cache.length, size)    # (B,) rolling slot (no-op when
+                                          # size == max_len since length < size)
+    b_idx = jnp.arange(cache.k.shape[0])
+    new_k = cache.k.at[b_idx, :, slot, :].set(k_t.astype(cache.k.dtype))
+    new_v = cache.v.at[b_idx, :, slot, :].set(v_t.astype(cache.v.dtype))
+    return KVCache(new_k, new_v, cache.length + 1)
+
+
+def attn_decode_xla(p, x_t, cache: KVCache, *, rope_theta=10000.0,
+                    window=None, head_mask=None):
+    """One-token decode, pure-JAX (GSPMD-shardable einsum over the cache).
+
+    x_t: (B, d_model). Returns (out (B, d_model), new_cache).
+    """
+    B, d_model = x_t.shape
+    pos = cache.length                    # (B,)
+    q = jnp.einsum("bd,dhk->bhk", x_t, p["wq"]).astype(x_t.dtype)
+    k = jnp.einsum("bd,dhk->bhk", x_t, p["wk"]).astype(x_t.dtype)
+    v = jnp.einsum("bd,dhk->bhk", x_t, p["wv"]).astype(x_t.dtype)
+    q = layers.apply_rope(q[:, None], pos[:, None], rope_theta)[:, 0]
+    k = layers.apply_rope(k[:, None], pos[:, None], rope_theta)[:, 0]
+    cache = _cache_insert(cache, k, v)
+
+    size = cache.k.shape[2]
+    Hq = q.shape[1]
+    Hkv = cache.k.shape[1]
+    G = Hq // Hkv
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    # mixed-precision einsums with fp32 accumulation: upcasting the cache
+    # (`.astype(f32)`) materializes a full fp32 copy of the KV cache every
+    # token — measured at ~50% of the decode memory term (§Perf i7)
+    qg = q.reshape(B, Hkv, G, hd)
+    s = scale * jnp.einsum("bhgd,bhtd->bhgt", qg, cache.k,
+                           preferred_element_type=jnp.float32)
+    # valid positions: slot t holds a token iff t < length (linear phase) or
+    # always (rolling phase, length > size).  Window masking is implicit in
+    # the rolling buffer size.
+    t_idx = jnp.arange(size)
+    valid = t_idx[None, :] < cache.length[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    p_att = jnp.exp(s - pmax)
+    p_att = p_att / jnp.maximum(jnp.sum(p_att, -1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p_att.astype(cache.v.dtype), cache.v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, Hq, hd).astype(x_t.dtype)
+    o = _apply_head_mask(o, head_mask)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"]).astype(x_t.dtype)
+    return out, cache
+
+
+def attn_decode_pallas(p, x_t, cache: KVCache, *, rope_theta=10000.0,
+                       window=None, block_t=256):
+    """One-token decode through the Pallas flash-decode kernel."""
+    from repro.kernels import ops
+    pos = cache.length
+    q = jnp.einsum("bd,dhk->bhk", x_t, p["wq"]).astype(x_t.dtype)
+    k = jnp.einsum("bd,dhk->bhk", x_t, p["wk"]).astype(x_t.dtype)
+    v = jnp.einsum("bd,dhk->bhk", x_t, p["wv"]).astype(x_t.dtype)
+    q = layers.apply_rope(q[:, None], pos[:, None], rope_theta)[:, 0]
+    k = layers.apply_rope(k[:, None], pos[:, None], rope_theta)[:, 0]
+    cache = _cache_insert(cache, k, v)
+    eff_len = jnp.minimum(cache.length, cache.k.shape[2])
+    o = ops.attn_decode(q, cache.k, cache.v, eff_len,
+                        block_t=min(block_t, cache.k.shape[2]))
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"]).astype(x_t.dtype)
+    return out, cache

@@ -1,0 +1,128 @@
+"""Gated DeltaNet mixer layer — the paper's primitive as a model layer.
+
+Projects the residual stream to q/k (h_k heads) and v (h_v = R*h_k heads,
+Grouped Value Attention), computes the per-head gates from token-dependent
+inputs (paper Eqs. 5-6), L2-normalizes q/k (delta-rule stability), and runs:
+
+  * train / prefill: chunkwise-parallel gated delta rule
+    (pure-JAX `core.gdn.gdn_prefill` for the differentiable path,
+     Pallas `kernels.ops.gdn_prefill` with VMEM-resident state for serving)
+  * decode: the fused one-read-one-write persistent-state step
+    (pure-JAX fused Alg. 2, or the Pallas `gdn_decode` kernel on TPU)
+
+State cache: GDNState(S (B, Hv, d_k, d_v) fp32, conv carries none — the
+paper's layer has no conv).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gdn as gdn_core
+from repro.models import layers
+
+
+class GDNState(NamedTuple):
+    S: jax.Array          # (B, Hv, d_k, d_v) fp32 — the persistent state
+
+
+def init_gdn(key, d_model, n_k_heads, n_v_heads, head_dim,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    s = d_model ** -0.5
+    hv, hk, hd = n_v_heads, n_k_heads, head_dim
+    return {
+        "wq": (jax.random.normal(ks[0], (d_model, hk, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, hk, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, hv, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (hv, hd, d_model))
+               * ((hv * hd) ** -0.5)).astype(dtype),
+        "w_alpha": (jax.random.normal(ks[4], (d_model, hv)) * s).astype(dtype),
+        "w_beta": (jax.random.normal(ks[5], (d_model, hv)) * s).astype(dtype),
+        # per-head learned gate parameters (paper Eq. 5)
+        "A_log": jnp.zeros((hv,), jnp.float32),
+        "dt_bias": jnp.full((hv,), 0.5, jnp.float32),
+    }
+
+
+def _l2norm(x, eps=1e-6):
+    n = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)), -1,
+                         keepdims=True) + eps)
+    return (x.astype(jnp.float32) / n).astype(x.dtype)
+
+
+def _proj(p, x):
+    """x: (B, T, d) -> q,k (B,T,Hk,hd), v (B,T,Hv,hd), log_g/beta (B,T,Hv)."""
+    q = _l2norm(jnp.einsum("btd,dhk->bthk", x, p["wq"]).astype(x.dtype))
+    k = _l2norm(jnp.einsum("btd,dhk->bthk", x, p["wk"]).astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"]).astype(x.dtype)
+    alpha = jnp.einsum("btd,dh->bth", x, p["w_alpha"]).astype(jnp.float32)
+    b = jnp.einsum("btd,dh->bth", x, p["w_beta"]).astype(jnp.float32)
+    log_g = gdn_core.log_gate(alpha, p["A_log"], p["dt_bias"])
+    beta = jax.nn.sigmoid(b)
+    return q, k, v, log_g, beta
+
+
+def init_gdn_state(batch, n_v_heads, head_dim, d_v=None,
+                   dtype=jnp.float32):
+    """dtype=bf16 halves decode state traffic (beyond-paper; paper is fp32).
+    The delta rule's error correction partially compensates the rounding —
+    accuracy tradeoff quantified in tests/test_state_dtype.py."""
+    d_v = head_dim if d_v is None else d_v
+    return GDNState(S=jnp.zeros((batch, n_v_heads, head_dim, d_v), dtype))
+
+
+def gdn_train(p, x, *, chunk=64):
+    """Full-sequence gated delta rule (differentiable chunkwise path)."""
+    B, T, _ = x.shape
+    hv = p["wv"].shape[1]
+    hd = p["wv"].shape[2]
+    q, k, v, log_g, beta = _proj(p, x)
+    S0 = jnp.zeros((B, hv, q.shape[-1], hd), jnp.float32)
+    O, _ = gdn_core.gdn_prefill(q.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), log_g, beta, S0,
+                                chunk=chunk)
+    O = O.astype(x.dtype)
+    return jnp.einsum("bthk,hkd->btd", O, p["wo"]).astype(x.dtype)
+
+
+def gdn_prefill(p, x, state: GDNState, *, chunk=64, use_pallas=False):
+    """Prompt processing; returns (out, final state)."""
+    q, k, v, log_g, beta = _proj(p, x)
+    if use_pallas:
+        from repro.kernels import ops
+        O, S = ops.gdn_prefill(q, k, v, log_g, beta, state.S, chunk=chunk)
+    else:
+        O, S = gdn_core.gdn_prefill(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), log_g, beta,
+            state.S.astype(jnp.float32), chunk=chunk)
+        S = S.astype(state.S.dtype)
+    O = O.astype(x.dtype)
+    out = jnp.einsum("bthk,hkd->btd", O, p["wo"]).astype(x.dtype)
+    return out, GDNState(S=S)
+
+
+def gdn_decode(p, x_t, state: GDNState, *, use_pallas=False, head_block=8):
+    """One-token fused decode step (paper Alg. 2). x_t: (B, d_model)."""
+    x = x_t[:, None, :]
+    q, k, v, log_g, beta = _proj(p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    g = jnp.exp(log_g[:, 0])
+    beta = beta[:, 0]
+    if use_pallas:
+        from repro.kernels import ops
+        o, S = ops.gdn_decode(q, k, v, state.S, g, beta,
+                              head_block=head_block)
+    else:
+        o, S = gdn_core.gdn_decode(q.astype(jnp.float32),
+                                   k.astype(jnp.float32),
+                                   v.astype(jnp.float32),
+                                   state.S.astype(jnp.float32), g, beta,
+                                   fused=True)
+        o = o.astype(x_t.dtype)
+        S = S.astype(state.S.dtype)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"]).astype(x_t.dtype)
+    return out, GDNState(S=S)

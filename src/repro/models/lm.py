@@ -1,0 +1,372 @@
+"""Unified hybrid causal LM driving all assigned architectures.
+
+A model is a cycled ``pattern`` of mixer kinds (attn / swa / gdn / ssm /
+rglru) plus a per-layer FFN (dense / moe / moe+dense / none).  Layers are
+grouped into (pattern, repeats) groups and executed with ``lax.scan`` over
+stacked parameters — compile time stays O(pattern) instead of O(n_layers)
+for the 60-layer archs, and remat wraps each scanned block.
+
+Entry points:
+  init_lm(key, cfg)                         -> params
+  forward_hidden(params, cfg, tokens|embeds)-> (B, T, d) final hidden
+  loss_fn(params, cfg, batch)               -> scalar loss, metrics  (chunked CE)
+  init_caches(cfg, batch, max_len)          -> decode caches (per group, stacked)
+  prefill(params, cfg, tokens|embeds, caches)-> (last-token logits, caches)
+  decode_step(params, cfg, token, caches)   -> (logits, caches)
+
+VLM / audio archs: the modality frontend is a stub per the assignment —
+``embeds`` (precomputed patch/frame embeddings, (B, T, d_model)) are fed
+directly in place of token embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, gdn_layer, layers, moe, rglru, ssm
+
+
+def _constrain(x, dp_axes):
+    """Pin the batch dim of activations to the DP axes (GSPMD propagation
+    otherwise drops batch sharding through gathers/microbatch reshapes)."""
+    if dp_axes is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(dp_axes, *([None] * (x.ndim - 1))))
+
+
+# ---------------------------------------------------------------- grouping
+
+def build_groups(cfg: ArchConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    """[(pattern kinds, repeats)] covering cfg.n_layers."""
+    L, P = cfg.n_layers, len(cfg.pattern)
+    groups = []
+    if L // P:
+        groups.append((cfg.pattern, L // P))
+    if L % P:
+        groups.append((tuple(cfg.pattern[: L % P]), 1))
+    return groups
+
+
+# ---------------------------------------------------------------- init
+
+def _init_mixer(key, kind: str, cfg: ArchConfig, dtype):
+    if kind in ("attn", "swa"):
+        return attention.init_attention(key, cfg.d_model, cfg.hq_eff,
+                                        cfg.hkv_eff, cfg.head_dim, dtype)
+    if kind == "gdn":
+        return gdn_layer.init_gdn(key, cfg.d_model, cfg.gdn_k_heads,
+                                  cfg.gdn_v_heads, cfg.gdn_head_dim, dtype)
+    if kind == "ssm":
+        return ssm.init_ssm(key, cfg.d_model, cfg.ssm_d_inner,
+                            cfg.ssm_headdim, cfg.ssm_d_state, dtype=dtype)
+    if kind == "rglru":
+        return rglru.init_rglru(key, cfg.d_model, cfg.rglru_width,
+                                dtype=dtype)
+    raise ValueError(kind)
+
+
+def _init_layer(key, kind: str, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": layers.init_rmsnorm(cfg.d_model),
+         "mixer": _init_mixer(ks[0], kind, cfg, dtype)}
+    if cfg.ffn != "none":
+        p["norm2"] = layers.init_rmsnorm(cfg.d_model)
+        if cfg.ffn in ("dense",):
+            p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        if cfg.ffn in ("moe", "moe+dense"):
+            p["moe"] = moe.init_moe(ks[2], cfg.d_model, cfg.d_ff,
+                                    cfg.moe_experts, dtype)
+        if cfg.ffn == "moe+dense":
+            p["mlp"] = layers.init_mlp(ks[1], cfg.d_model,
+                                       cfg.d_ff_dense or cfg.d_ff, dtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.act_dtype)
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": layers.init_embedding(k_embed, cfg.vocab, cfg.d_model,
+                                       dtype),
+        "final_norm": layers.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": (jax.random.normal(k_head, (cfg.d_model, cfg.vocab))
+                  * cfg.d_model ** -0.5).astype(dtype)}
+    groups = build_groups(cfg)
+    layer_keys = iter(jax.random.split(k_layers, cfg.n_layers))
+    gparams = []
+    for kinds, reps in groups:
+        per_pos: List[List[Any]] = [[] for _ in kinds]
+        for _ in range(reps):
+            for i, kind in enumerate(kinds):
+                per_pos[i].append(_init_layer(next(layer_keys), kind, cfg,
+                                              dtype))
+        gparams.append([_stack(ps) for ps in per_pos])
+    params["groups"] = gparams
+    return params
+
+
+# ---------------------------------------------------------------- layer fwd
+
+def _head_mask(cfg: ArchConfig):
+    if not cfg.n_heads_pad and not cfg.n_kv_heads_pad:
+        return None
+    return jnp.asarray(cfg.head_mask())
+
+
+def _mixer_train(kind, cfg: ArchConfig, mp, h):
+    if kind == "attn":
+        return attention.attn_train(mp, h, rope_theta=cfg.rope_theta,
+                                    use_flash_kernel=cfg.use_flash_kernel,
+                                    head_mask=_head_mask(cfg))
+    if kind == "swa":
+        return attention.attn_train(mp, h, rope_theta=cfg.rope_theta,
+                                    window=cfg.window,
+                                    use_flash_kernel=cfg.use_flash_kernel,
+                                    head_mask=_head_mask(cfg))
+    if kind == "gdn":
+        return gdn_layer.gdn_train(mp, h)
+    if kind == "ssm":
+        return ssm.ssm_train(mp, h, d_inner=cfg.ssm_d_inner,
+                             headdim=cfg.ssm_headdim,
+                             d_state=cfg.ssm_d_state)
+    if kind == "rglru":
+        return rglru.rglru_train(mp, h)
+    raise ValueError(kind)
+
+
+def _ffn_fwd(cfg: ArchConfig, lp, x, decode: bool):
+    if cfg.ffn == "none":
+        return x, 0.0
+    h = layers.rmsnorm_fwd(lp["norm2"], x, cfg.norm_eps)
+    aux = 0.0
+    y = 0.0
+    if "moe" in lp:
+        if decode:
+            y = y + moe.moe_decode(lp["moe"], h, top_k=cfg.moe_top_k)
+        else:
+            ym, aux = moe.moe_fwd(lp["moe"], h, top_k=cfg.moe_top_k,
+                                  group_size=cfg.moe_group_size,
+                                  capacity_factor=cfg.moe_capacity_factor)
+            y = y + ym
+    if "mlp" in lp:
+        y = y + layers.mlp_fwd(lp["mlp"], h)
+    return x + y, aux
+
+
+def _layer_train(kind, cfg: ArchConfig, lp, x):
+    h = layers.rmsnorm_fwd(lp["norm1"], x, cfg.norm_eps)
+    x = x + _mixer_train(kind, cfg, lp["mixer"], h)
+    x, aux = _ffn_fwd(cfg, lp, x, decode=False)
+    return x, aux
+
+
+# ---------------------------------------------------------------- train fwd
+
+def forward_hidden(params, cfg: ArchConfig, tokens=None, embeds=None,
+                   dp_axes=None):
+    """Returns (final hidden (B, T, d), total MoE aux loss)."""
+    x = embeds if embeds is not None else layers.embed_fwd(params["embed"],
+                                                           tokens)
+    x = _constrain(x.astype(jnp.dtype(cfg.act_dtype)), dp_axes)
+    aux_total = jnp.float32(0.0)
+    groups = build_groups(cfg)
+    for (kinds, reps), gp in zip(groups, params["groups"]):
+
+        def block(x, lp_slice, kinds=kinds):
+            aux = jnp.float32(0.0)
+            for i, kind in enumerate(kinds):
+                x, a = _layer_train(kind, cfg, lp_slice[i], x)
+                x = _constrain(x, dp_axes)
+                aux = aux + a
+            return x, aux
+
+        if cfg.remat:
+            block = jax.checkpoint(block)
+
+        x, auxs = jax.lax.scan(block, x, gp)
+        aux_total = aux_total + jnp.sum(auxs)
+    return x, aux_total
+
+
+def _logits(params, cfg: ArchConfig, h):
+    if cfg.tie_embeddings:
+        return layers.logits_fwd(params["embed"], h)
+    return jax.lax.dot_general(
+        h, params["lm_head"]["w"], (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, t_chunk=1024, z_loss=1e-4,
+            aux_weight=0.01, dp_axes=None):
+    """Chunked-over-T cross entropy (never materializes (B, T, V) fp32)."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    labels = batch["labels"]
+    h, aux = forward_hidden(params, cfg, tokens, embeds, dp_axes=dp_axes)
+    B, T, _ = h.shape
+    tc = min(t_chunk, T)
+    n = T // tc
+
+    def chunk_loss(hc, lc):
+        logits = _logits(params, cfg, hc)
+        return layers.cross_entropy(logits, lc, z_loss=z_loss)
+
+    if n <= 1:
+        ce = chunk_loss(h, labels)
+    else:
+        hc = h[:, : n * tc].reshape(B, n, tc, -1).transpose(1, 0, 2, 3)
+        lc = labels[:, : n * tc].reshape(B, n, tc).transpose(1, 0, 2)
+        losses = jax.lax.map(jax.checkpoint(lambda args: chunk_loss(*args)),
+                             (hc, lc))
+        ce = jnp.mean(losses)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------- caches
+
+def _init_layer_cache(kind, cfg: ArchConfig, batch, max_len, dtype):
+    if kind == "attn":
+        return attention.init_kv_cache(batch, cfg.hkv_eff, cfg.head_dim,
+                                       max_len, dtype=dtype)
+    if kind == "swa":
+        return attention.init_kv_cache(batch, cfg.hkv_eff, cfg.head_dim,
+                                       max_len, window=cfg.window,
+                                       dtype=dtype)
+    if kind == "gdn":
+        return gdn_layer.init_gdn_state(batch, cfg.gdn_v_heads,
+                                        cfg.gdn_head_dim,
+                                        dtype=jnp.dtype(cfg.state_dtype))
+    if kind == "ssm":
+        return ssm.init_ssm_state(batch, cfg.ssm_d_inner, cfg.ssm_headdim,
+                                  cfg.ssm_d_state, dtype=dtype,
+                                  state_dtype=jnp.dtype(cfg.state_dtype))
+    if kind == "rglru":
+        return rglru.init_rglru_state(batch, cfg.rglru_width, dtype=dtype)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int):
+    """Stacked per-group caches matching the scanned param layout."""
+    dtype = jnp.dtype(cfg.act_dtype)
+    caches = []
+    for kinds, reps in build_groups(cfg):
+        per_pos = []
+        for kind in kinds:
+            one = _init_layer_cache(kind, cfg, batch, max_len, dtype)
+            per_pos.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), one))
+        caches.append(per_pos)
+    return caches
+
+
+# ---------------------------------------------------------------- prefill / decode
+
+def _mixer_prefill(kind, cfg, mp, h, cache):
+    if kind == "attn":
+        return attention.attn_prefill(mp, h, cache,
+                                      rope_theta=cfg.rope_theta,
+                                      head_mask=_head_mask(cfg))
+    if kind == "swa":
+        return attention.attn_prefill(mp, h, cache,
+                                      rope_theta=cfg.rope_theta,
+                                      window=cfg.window,
+                                      head_mask=_head_mask(cfg))
+    if kind == "gdn":
+        return gdn_layer.gdn_prefill(mp, h, cache,
+                                     use_pallas=cfg.use_pallas_serving)
+    if kind == "ssm":
+        return ssm.ssm_prefill(mp, h, cache, d_inner=cfg.ssm_d_inner,
+                               headdim=cfg.ssm_headdim,
+                               d_state=cfg.ssm_d_state,
+                               use_pallas=cfg.use_pallas_serving)
+    if kind == "rglru":
+        return rglru.rglru_prefill(mp, h, cache)
+    raise ValueError(kind)
+
+
+def _mixer_decode(kind, cfg, mp, h, cache):
+    if kind == "attn":
+        return attention.attn_decode_xla(mp, h, cache,
+                                         rope_theta=cfg.rope_theta,
+                                         head_mask=_head_mask(cfg))
+    if kind == "swa":
+        return attention.attn_decode_xla(mp, h, cache,
+                                         rope_theta=cfg.rope_theta,
+                                         window=cfg.window,
+                                         head_mask=_head_mask(cfg))
+    if kind == "gdn":
+        return gdn_layer.gdn_decode(mp, h, cache,
+                                    use_pallas=cfg.use_pallas_serving)
+    if kind == "ssm":
+        return ssm.ssm_decode(mp, h, cache, d_inner=cfg.ssm_d_inner,
+                              headdim=cfg.ssm_headdim,
+                              d_state=cfg.ssm_d_state,
+                              use_pallas=cfg.use_pallas_serving)
+    if kind == "rglru":
+        return rglru.rglru_decode(mp, h, cache)
+    raise ValueError(kind)
+
+
+def _run_cached(params, cfg: ArchConfig, x, caches, mode: str,
+                dp_axes=None):
+    groups = build_groups(cfg)
+    new_caches = []
+    for (kinds, reps), gp, gc in zip(groups, params["groups"], caches):
+
+        def block(x, sl, kinds=kinds):
+            lp_slice, c_slice = sl
+            new_c = []
+            for i, kind in enumerate(kinds):
+                lp = lp_slice[i]
+                h = layers.rmsnorm_fwd(lp["norm1"], x, cfg.norm_eps)
+                if mode == "prefill":
+                    mix, nc = _mixer_prefill(kind, cfg, lp["mixer"], h,
+                                             c_slice[i])
+                else:
+                    mix, nc = _mixer_decode(kind, cfg, lp["mixer"], h,
+                                            c_slice[i])
+                x = x + mix
+                x, _ = _ffn_fwd(cfg, lp, x, decode=(mode == "decode"))
+                x = _constrain(x, dp_axes)
+                new_c.append(nc)
+            return x, new_c
+
+        x, ncs = jax.lax.scan(block, x, (gp, gc))
+        new_caches.append(ncs)
+    return x, new_caches
+
+
+def prefill(params, cfg: ArchConfig, caches, tokens=None, embeds=None,
+            dp_axes=None):
+    """Process the prompt; returns (last-token logits (B, V) fp32, caches)."""
+    x = embeds if embeds is not None else layers.embed_fwd(params["embed"],
+                                                           tokens)
+    x = _constrain(x.astype(jnp.dtype(cfg.act_dtype)), dp_axes)
+    x, caches = _run_cached(params, cfg, x, caches, "prefill",
+                            dp_axes=dp_axes)
+    x = layers.rmsnorm_fwd(params["final_norm"], x[:, -1], cfg.norm_eps)
+    return _logits(params, cfg, x), caches
+
+
+def decode_step(params, cfg: ArchConfig, tokens_t, caches, dp_axes=None):
+    """One decode step. tokens_t: (B,) int32. Returns (logits (B, V), caches)."""
+    x = layers.embed_fwd(params["embed"], tokens_t)
+    x = _constrain(x.astype(jnp.dtype(cfg.act_dtype)), dp_axes)
+    x, caches = _run_cached(params, cfg, x, caches, "decode",
+                            dp_axes=dp_axes)
+    x = layers.rmsnorm_fwd(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), caches

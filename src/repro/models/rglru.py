@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (RecurrentGemma) — diagonal vector-state mixer.
+
+The paper's persistence insight applies (the state is O(1) and must round-trip
+HBM every token on GPU) but the *matrix-state MXU datapath does not*: the
+RG-LRU state is a width-d vector with elementwise recurrence
+
+    a_t = exp(-c * softplus(Lambda) * sigma(W_a x_t))        (gate)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigma(W_x x_t) * x_t)
+
+so decode is a pure VPU workload; fusion (XLA already fuses the elementwise
+chain into one kernel) is the TPU-idiomatic equivalent — see DESIGN.md
+§Arch-applicability.  Train/prefill uses an associative scan over T.
+
+Block layout follows RecurrentGemma: linear in -> causal conv(4) -> RG-LRU
+-> gated (GeGLU-style) linear out.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0  # RecurrentGemma's fixed gate sharpness constant
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, width) fp32
+    conv: jax.Array       # (B, conv_width-1, width)
+
+
+def init_rglru(key, d_model, width, conv_width=4, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    sw = width ** -0.5
+    return {
+        "in_x": (jax.random.normal(ks[0], (d_model, width)) * s).astype(dtype),
+        "in_y": (jax.random.normal(ks[1], (d_model, width)) * s).astype(dtype),
+        "conv": layers.init_conv1d(ks[2], width, conv_width, dtype),
+        "w_a": (jax.random.normal(ks[3], (width, width)) * sw).astype(dtype),
+        "w_x": (jax.random.normal(ks[4], (width, width)) * sw).astype(dtype),
+        "Lambda": jnp.full((width,), -4.0, jnp.float32),  # softplus^-1 region
+        "out": (jax.random.normal(ks[5], (width, d_model)) * sw).astype(dtype),
+    }
+
+
+def _gates(p, x):
+    """x: (..., width) -> (log_a, gated_input) in fp32."""
+    r = jax.nn.sigmoid(layers.dot(x, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dot(x, p["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["Lambda"]) * r          # <= 0
+    gated = i * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def _scan_rglru(log_a, gated, h0):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (T)."""
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = a_c * h0[:, None, :] + b_c
+    return h
+
+
+def init_rglru_state(batch, width, conv_width=4, dtype=jnp.float32):
+    return RGLRUState(h=jnp.zeros((batch, width), jnp.float32),
+                      conv=jnp.zeros((batch, conv_width - 1, width), dtype))
+
+
+def rglru_train(p, x):
+    B, T, _ = x.shape
+    xb = layers.dot(x, p["in_x"])
+    yb = jax.nn.gelu(layers.dot(x, p["in_y"]).astype(jnp.float32))
+    xb = layers.conv1d_fwd(p["conv"], xb)
+    log_a, gated = _gates(p, xb)
+    h = _scan_rglru(log_a, gated, jnp.zeros((B, xb.shape[-1]), jnp.float32))
+    out = (h * yb).astype(x.dtype)
+    return layers.dot(out, p["out"])
+
+
+def rglru_prefill(p, x, state: RGLRUState):
+    B, T, _ = x.shape
+    xb = layers.dot(x, p["in_x"])
+    yb = jax.nn.gelu(layers.dot(x, p["in_y"]).astype(jnp.float32))
+    conv_w = p["conv"]["w"].shape[0]
+    full = jnp.concatenate([state.conv.astype(xb.dtype), xb], axis=1)
+    new_conv = full[:, -(conv_w - 1):, :]
+    xb = layers.conv1d_fwd(p["conv"], full)[:, -T:, :]
+    log_a, gated = _gates(p, xb)
+    h = _scan_rglru(log_a, gated, state.h)
+    out = (h * yb).astype(x.dtype)
+    return layers.dot(out, p["out"]), RGLRUState(
+        h=h[:, -1, :], conv=new_conv.astype(state.conv.dtype))
+
+
+def rglru_decode(p, x_t, state: RGLRUState):
+    """One-token decode: a handful of fused elementwise VPU ops."""
+    xb = layers.dot(x_t, p["in_x"])
+    yb = jax.nn.gelu(layers.dot(x_t, p["in_y"]).astype(jnp.float32))
+    xb, new_conv = layers.conv1d_decode(p["conv"], xb, state.conv)
+    log_a, gated = _gates(p, xb)
+    a = jnp.exp(log_a)
+    h = a * state.h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    out = (h * yb).astype(x_t.dtype)
+    return layers.dot(out, p["out"]), RGLRUState(h=h, conv=new_conv)

@@ -1,0 +1,172 @@
+"""Mamba-2 (SSD) mixer — the attention-free assigned architecture.
+
+Decode shares the paper's persistent-state structure: per head h a state
+S^(h) in R^{d_state x d_head} updated as S <- g*S + B x^T with output
+y = S^T C — i.e. the GDN recurrence *without* the delta rule
+(`delta_rule=False` in the shared kernels; see DESIGN.md §Arch-applicability).
+
+Projections are kept separate (w_z / w_x / w_B / w_C / w_dt) so tensor
+parallelism shards the per-head quantities (x, dt, heads) on the model axis
+while the head-shared B/C (n_groups=1 — the SSM analogue of MQA) stay
+replicated, Megatron-Mamba style.  Causal conv(4) applies depthwise to x,
+B and C with separate filters (equivalent to the fused xBC conv).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gdn as gdn_core
+from repro.models import layers
+
+
+class SSMState(NamedTuple):
+    S: jax.Array          # (B, nheads, d_state, headdim) fp32
+    conv_x: jax.Array     # (B, conv_width-1, d_inner)
+    conv_B: jax.Array     # (B, conv_width-1, d_state)
+    conv_C: jax.Array     # (B, conv_width-1, d_state)
+
+
+def init_ssm(key, d_model, d_inner, headdim, d_state, conv_width=4,
+             dtype=jnp.float32):
+    nheads = d_inner // headdim
+    ks = jax.random.split(key, 9)
+    s = d_model ** -0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (d_model, d_inner)) * s).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d_model, d_inner)) * s).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (d_model, d_state)) * s).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (d_model, d_state)) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d_model, nheads)) * s).astype(dtype),
+        "conv_x": layers.init_conv1d(ks[5], d_inner, conv_width, dtype),
+        "conv_B": layers.init_conv1d(ks[6], d_state, conv_width, dtype),
+        "conv_C": layers.init_conv1d(ks[7], d_state, conv_width, dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "dt_bias": jnp.full((nheads,), 0.5, jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm": layers.init_rmsnorm(d_inner),
+        "out_proj": (jax.random.normal(ks[8], (d_inner, d_model))
+                     * (d_inner ** -0.5)).astype(dtype),
+    }
+
+
+def init_ssm_state(batch, d_inner, headdim, d_state, conv_width=4,
+                   dtype=jnp.float32, state_dtype=jnp.float32):
+    nheads = d_inner // headdim
+    return SSMState(
+        S=jnp.zeros((batch, nheads, d_state, headdim), state_dtype),
+        conv_x=jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+        conv_B=jnp.zeros((batch, conv_width - 1, d_state), dtype),
+        conv_C=jnp.zeros((batch, conv_width - 1, d_state), dtype),
+    )
+
+
+def _silu(x):
+    return jax.nn.silu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_terms(p, x_in, B_in, C_in, dt, headdim):
+    """Post-conv activations -> kernel inputs. Shapes (..., nheads, hd) etc."""
+    nheads = p["A_log"].shape[0]
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    log_g = -jnp.exp(p["A_log"]) * dt_s                   # (..., nheads)
+    xh = x_in.reshape(*x_in.shape[:-1], nheads, headdim)
+    v = (xh.astype(jnp.float32) * dt_s[..., None]).astype(x_in.dtype)
+    return xh, v, log_g
+
+
+def _out(p, y, z, xh, x_dtype):
+    d_shape = (1,) * (y.ndim - 2) + (p["D"].shape[0], 1)
+    y = y + p["D"].reshape(d_shape) * xh.astype(y.dtype)
+    y = y.reshape(*y.shape[:-2], -1)
+    y = layers.rmsnorm_fwd(p["norm"], y.astype(x_dtype))
+    y = y * _silu(z)
+    return layers.dot(y, p["out_proj"])
+
+
+def ssm_train(p, x, *, d_inner, headdim, d_state, chunk=64):
+    """Full-sequence SSD via the shared chunkwise path (delta_rule=False)."""
+    B, T, _ = x.shape
+    nheads = d_inner // headdim
+    z = layers.dot(x, p["w_z"])
+    xi = _silu(layers.conv1d_fwd(p["conv_x"], layers.dot(x, p["w_x"])))
+    Bi = _silu(layers.conv1d_fwd(p["conv_B"], layers.dot(x, p["w_B"])))
+    Ci = _silu(layers.conv1d_fwd(p["conv_C"], layers.dot(x, p["w_C"])))
+    dt = layers.dot(x, p["w_dt"])
+    xh, v, log_g = _ssd_terms(p, xi, Bi, Ci, dt, headdim)
+    S0 = jnp.zeros((B, nheads, d_state, headdim), jnp.float32)
+    O, _ = gdn_core.gdn_prefill(
+        Ci[:, :, None, :].astype(jnp.float32),
+        Bi[:, :, None, :].astype(jnp.float32),
+        v.astype(jnp.float32), log_g, jnp.ones_like(log_g), S0,
+        chunk=chunk, delta_rule=False)
+    return _out(p, O.astype(x.dtype), z, xh, x.dtype)
+
+
+def _conv_prefill(conv_p, u, cache):
+    """Seeded causal conv; returns (activated output, new cache tail)."""
+    T = u.shape[1]
+    w = conv_p["w"].shape[0]
+    full = jnp.concatenate([cache.astype(u.dtype), u], axis=1)
+    out = layers.conv1d_fwd(conv_p, full)[:, -T:, :]
+    return _silu(out), full[:, -(w - 1):, :]
+
+
+def ssm_prefill(p, x, state: SSMState, *, d_inner, headdim, d_state,
+                chunk=64, use_pallas=False):
+    B, T, _ = x.shape
+    z = layers.dot(x, p["w_z"])
+    xi, cx = _conv_prefill(p["conv_x"], layers.dot(x, p["w_x"]), state.conv_x)
+    Bi, cB = _conv_prefill(p["conv_B"], layers.dot(x, p["w_B"]), state.conv_B)
+    Ci, cC = _conv_prefill(p["conv_C"], layers.dot(x, p["w_C"]), state.conv_C)
+    dt = layers.dot(x, p["w_dt"])
+    xh, v, log_g = _ssd_terms(p, xi, Bi, Ci, dt, headdim)
+    if use_pallas:
+        from repro.kernels import ops
+        O, S = ops.gdn_prefill(
+            Ci[:, :, None, :], Bi[:, :, None, :], v, log_g,
+            jnp.ones_like(log_g), state.S, chunk=chunk, delta_rule=False)
+    else:
+        O, S = gdn_core.gdn_prefill(
+            Ci[:, :, None, :].astype(jnp.float32),
+            Bi[:, :, None, :].astype(jnp.float32),
+            v.astype(jnp.float32), log_g, jnp.ones_like(log_g),
+            state.S.astype(jnp.float32), chunk=chunk, delta_rule=False)
+        S = S.astype(state.S.dtype)
+    out = _out(p, O.astype(x.dtype), z, xh, x.dtype)
+    return out, SSMState(S=S, conv_x=cx.astype(state.conv_x.dtype),
+                         conv_B=cB.astype(state.conv_B.dtype),
+                         conv_C=cC.astype(state.conv_C.dtype))
+
+
+def ssm_decode(p, x_t, state: SSMState, *, d_inner, headdim, d_state,
+               use_pallas=False, head_block=8):
+    """One-token decode via the fused persistent-state kernel path."""
+    z = layers.dot(x_t, p["w_z"])
+    xi, cx = layers.conv1d_decode(p["conv_x"], layers.dot(x_t, p["w_x"]),
+                                  state.conv_x)
+    Bi, cB = layers.conv1d_decode(p["conv_B"], layers.dot(x_t, p["w_B"]),
+                                  state.conv_B)
+    Ci, cC = layers.conv1d_decode(p["conv_C"], layers.dot(x_t, p["w_C"]),
+                                  state.conv_C)
+    xi, Bi, Ci = _silu(xi), _silu(Bi), _silu(Ci)
+    dt = layers.dot(x_t, p["w_dt"])
+    xh, v, log_g = _ssd_terms(p, xi, Bi, Ci, dt, headdim)
+    g = jnp.exp(log_g)
+    ones = jnp.ones_like(g)
+    if use_pallas:
+        from repro.kernels import ops
+        o, S = ops.gdn_decode(Ci[:, None, :], Bi[:, None, :], v,
+                              state.S, g, ones, head_block=head_block,
+                              delta_rule=False)
+    else:
+        o, S = gdn_core.gdn_decode(
+            Ci[:, None, :].astype(jnp.float32),
+            Bi[:, None, :].astype(jnp.float32),
+            v.astype(jnp.float32), state.S.astype(jnp.float32), g, ones,
+            fused=True, delta_rule=False)
+        S = S.astype(state.S.dtype)
+    out = _out(p, o.astype(x_t.dtype), z, xh, x_t.dtype)
+    return out, SSMState(S=S, conv_x=cx, conv_B=cB, conv_C=cC)

@@ -1,0 +1,163 @@
+"""Optimizers + schedules (self-contained; no optax in this environment).
+
+AdamW with:
+  * configurable moment dtypes — bf16 first/second moments with an
+    error-feedback residual buffer (distributed-optimization trick: halves
+    optimizer-state HBM, the residual keeps the update unbiased over steps)
+  * optional Adafactor-style factored second moment for the ~0.5T-param
+    archs (arctic-480b) where even bf16 moments would not fit v5e HBM
+  * global-norm clipping
+
+Schedules: WSD (warmup-stable-decay — minicpm's schedule) and cosine.
+All state lives in a pytree mirroring params, so GSPMD shards it with the
+same NamedShardings (ZeRO-style when the FSDP axis is enabled).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- schedules
+
+def wsd_schedule(peak_lr, warmup_steps, stable_steps, decay_steps,
+                 final_frac=0.1):
+    """MiniCPM's warmup-stable-decay schedule."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+        in_decay = jnp.clip((step - warmup_steps - stable_steps)
+                            / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+        decay = peak_lr * (1.0 - (1.0 - final_frac) * in_decay)
+        return jnp.where(step < warmup_steps, warm, decay)
+    return lr
+
+
+def cosine_schedule(peak_lr, warmup_steps, total_steps, final_frac=0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return lr
+
+
+# ----------------------------------------------------------------- clipping
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ----------------------------------------------------------------- AdamW
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"      # "bfloat16" halves optimizer HBM
+    factored: bool = False             # Adafactor-style v for huge archs
+    momentum: bool = True              # False => Adafactor regime (no m/ef)
+    error_feedback: bool = True        # residual buffer for bf16 moments
+    clip_norm: float = 1.0
+
+
+def _factored_dims(shape):
+    """Last two non-trivial dims, Adafactor convention; None if ndim < 2."""
+    if len(shape) < 2 or shape[-1] == 1 or shape[-2] == 1:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def init_adamw(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def per_leaf(p):
+        st = {"m": jnp.zeros(p.shape, mdt)} if cfg.momentum else {}
+        fd = _factored_dims(p.shape) if cfg.factored else None
+        if fd is not None:
+            r, c = fd
+            vr = list(p.shape); del vr[c]
+            vc = list(p.shape); del vc[r]
+            st["v_row"] = jnp.zeros(tuple(vr), jnp.float32)
+            st["v_col"] = jnp.zeros(tuple(vc), jnp.float32)
+        else:
+            st["v"] = jnp.zeros(p.shape, mdt)
+        if cfg.momentum and cfg.error_feedback and mdt != jnp.float32:
+            st["ef"] = jnp.zeros(p.shape, mdt)
+        return st
+
+    return {"mu": jax.tree.map(per_leaf, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig):
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    def per_leaf(g, st, p):
+        gf = g.astype(jnp.float32)
+        new_st = dict(st)
+        if "m" in st:
+            if "ef" in st:
+                gf_m = gf + st["ef"].astype(jnp.float32)
+            else:
+                gf_m = gf
+            m_new = cfg.b1 * st["m"].astype(jnp.float32) + (1 - cfg.b1) * gf_m
+            new_st["m"] = m_new.astype(st["m"].dtype)
+            if "ef" in st:   # error feedback: keep what bf16 rounding lost
+                new_st["ef"] = (m_new - new_st["m"].astype(jnp.float32)
+                                ).astype(st["ef"].dtype)
+        else:
+            m_new = gf      # momentum-free (Adafactor regime)
+        if "v_row" in st:
+            r, c = _factored_dims(p.shape)
+            g2 = gf * gf
+            vr = cfg.b2 * st["v_row"] + (1 - cfg.b2) * jnp.mean(g2, axis=c)
+            vc = cfg.b2 * st["v_col"] + (1 - cfg.b2) * jnp.mean(g2, axis=r)
+            new_st["v_row"], new_st["v_col"] = vr, vc
+            # reconstruct v ~= vr * vc / mean(vr)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            v_hat = (jnp.expand_dims(vr / denom.squeeze(-1)[..., None], c)
+                     * jnp.expand_dims(vc, r))
+        else:
+            v_new = cfg.b2 * st["v"].astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+            new_st["v"] = v_new.astype(st["v"].dtype)
+            v_hat = v_new
+        m_hat = (m_new / b1c) if "m" in st else m_new
+        update = m_hat / (jnp.sqrt(v_hat / b2c) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return new_p, new_st
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["mu"])
+    out = []
+    for g, s, p in zip(flat_g, flat_s, flat_p):
+        if p.ndim >= 3 and p.size >= (1 << 26):
+            # layer-stacked giants (e.g. 35 x 8 x 4864 x 448 experts): map
+            # the elementwise update over the stack dim so the fp32 temps
+            # are one layer, not the whole stack (v5e HBM headroom)
+            out.append(jax.lax.map(
+                lambda args: per_leaf(*args), (g, s, p)))
+        else:
+            out.append(per_leaf(g, s, p))
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "count": count}, gnorm

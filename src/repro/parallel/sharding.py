@@ -1,0 +1,267 @@
+"""Sharding rules: params / batches / decode caches -> PartitionSpecs.
+
+Axes:
+  * batch (DP)        -> ("pod", "data") when the pod axis exists
+  * tensor (TP/EP)    -> "model"   (attention & GDN heads, FFN hidden,
+                                    MoE experts, vocab)
+  * FSDP/ZeRO         -> "data" additionally shards the non-model dim of
+                          every large matrix + optimizer moments (enabled
+                          automatically for archs whose per-device footprint
+                          would exceed HBM; see `needs_fsdp`)
+  * SP                -> long-context prefill shards the sequence dim on
+                          "data" (activations only; handled by GSPMD from
+                          the batch spec when batch < data axis)
+
+Decode caches: batch on DP when it covers the axis; otherwise the *context*
+dim is sharded on "model" (flash-decode split-K: each device scans 1/16 of
+the KV cache) and linear-state archs shard heads on "model" (the paper's
+head parallelism, scaled out).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+# ---------------------------------------------------------------- helpers
+
+def mesh_axis(mesh: Mesh, name: str) -> bool:
+    return name in mesh.axis_names
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if mesh_axis(mesh, "pod") else ("data",)
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", None) or getattr(p, "name", None)
+            or getattr(p, "idx", p)) for p in path)
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Make a spec valid for jit in/out shardings: every annotated dim must
+    divide evenly.  Non-dividing axes are dropped; a dropped 'model' (TP)
+    axis is re-placed on the last free dim it divides (e.g. head_dim when
+    the head count is odd, vocab -> d_model for prime vocabs), so tensor
+    parallelism is preserved wherever the shapes allow."""
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    dropped = []
+    for i, ax in enumerate(axes):
+        if ax is None:
+            continue
+        if shape[i] % axis_size(mesh, ax) != 0:
+            dropped.append(ax)
+            axes[i] = None
+    for ax in dropped:
+        for i in range(len(shape) - 1, -1, -1):
+            if axes[i] is None and shape[i] % axis_size(mesh, ax) == 0 \
+                    and shape[i] > 1:
+                axes[i] = ax
+                break
+    return P(*axes)
+
+
+# ---------------------------------------------------------------- params
+
+def param_spec(path: str, shape, fsdp: bool) -> P:
+    """Partition spec for one parameter leaf, by key-path pattern."""
+    F = "data" if fsdp else None
+    M = "model"
+
+    def pick(*axes):
+        # drop annotations that don't divide cleanly enough to be useful
+        return P(*axes)
+
+    # --- embeddings / head
+    if path.endswith("embed/table"):
+        return pick(M, F)                        # vocab-parallel
+    if path.endswith("lm_head/w"):
+        return pick(F, M)
+
+    # --- norms, scalars, gates
+    if re.search(r"(norm\d?|final_norm)/scale", path) or path.endswith("/b"):
+        return P(None)
+    if re.search(r"(A_log|dt_bias|Lambda|/D)$", path):
+        return pick(M)
+
+    # --- MoE (expert-parallel on model)
+    if "/moe/" in path:
+        if path.endswith("router"):
+            return P(None, None)
+        if path.endswith(("wi_gate", "wi_up")):
+            return pick(M, F, None)              # (E, D, F)
+        if path.endswith("wo"):
+            return pick(M, None, F)              # (E, F, D)
+
+    # --- dense MLP
+    if "/mlp/" in path:
+        if path.endswith(("wi_gate", "wi_up")):
+            return pick(F, M)
+        if path.endswith("wo"):
+            return pick(M, F)
+
+    # --- attention / GDN mixers
+    if "/mixer/" in path:
+        if path.endswith(("wq", "wk", "wv")):
+            return pick(F, M, None)              # (D, H, hd): heads on TP
+        if path.endswith("wo"):
+            return pick(M, None, F)              # (H, hd, D)
+        if path.endswith(("w_alpha", "w_beta")):
+            return pick(F, M)
+        # ssm projections
+        if path.endswith(("w_z", "w_x")):
+            return pick(F, M)                    # d_inner on TP
+        if path.endswith(("w_B", "w_C")):
+            return pick(F, None)                 # head-shared: replicated
+        if path.endswith("w_dt"):
+            return pick(F, M)
+        if re.search(r"conv_x/w$", path):
+            return P(None, M)
+        if re.search(r"conv_[BC]/w$", path):
+            return P(None, None)
+        # rglru — gate matmuls are column-parallel (output W sharded, full
+        # input gathered once): row-parallel here made every gate a psum of
+        # the full (B, T, W) activation (EXPERIMENTS.md §Perf i5)
+        if path.endswith(("in_x", "in_y")):
+            return pick(F, M)
+        if path.endswith(("w_a", "w_x")):
+            return pick(None, M)
+        if re.search(r"conv/w$", path):
+            return P(None, M)
+        if path.endswith("out"):
+            return pick(M, F)
+        if path.endswith("out_proj"):
+            return pick(M, F)
+    if path.endswith("out_proj"):
+        return pick(M, F)
+
+    return P()                                   # replicate by default
+
+
+def _prepend_stack_dim(spec: P) -> P:
+    """Layer-stacked params get a leading (repeats,) dim: unsharded."""
+    return P(None, *spec)
+
+
+def params_specs(cfg: ArchConfig, params_shape, fsdp: bool, mesh: Mesh):
+    """Pytree of PartitionSpec matching a params (shape-)pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        ps = path_str(path)
+        spec = param_spec(ps, leaf.shape, fsdp)
+        if ps.startswith("groups/"):
+            spec = _prepend_stack_dim(spec)
+        # sanity: never annotate more axes than the leaf has dims
+        if len(spec) > len(leaf.shape):
+            spec = P(*list(spec)[: len(leaf.shape)])
+        specs.append(fit_spec(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def needs_fsdp(cfg: ArchConfig, mesh: Mesh, hbm_budget_gb: float = 10.0
+               ) -> bool:
+    """Shard params/moments over data too when TP alone won't fit HBM.
+
+    Rough estimate: bytes/param = 2 (bf16 param) + 2 (bf16 grad)
+    + 10 (adam m+v fp32 ... conservatively fp32) sharded model-axis only.
+    """
+    n_params = estimate_params(cfg)
+    per_dev = n_params * (2 + 2 + 10) / axis_size(mesh, "model")
+    return per_dev > hbm_budget_gb * 1e9
+
+
+def estimate_params(cfg: ArchConfig) -> int:
+    d, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    total = V * d * (1 if cfg.tie_embeddings else 2)
+    kinds = cfg.layer_kinds
+    for kind in kinds:
+        if kind in ("attn", "swa"):
+            total += d * cfg.head_dim * (cfg.n_heads + 2 * cfg.n_kv_heads)
+            total += cfg.n_heads * cfg.head_dim * d
+        elif kind == "gdn":
+            hd = cfg.gdn_head_dim
+            total += d * hd * (2 * cfg.gdn_k_heads + cfg.gdn_v_heads)
+            total += cfg.gdn_v_heads * hd * d + 2 * d * cfg.gdn_v_heads
+        elif kind == "ssm":
+            total += d * cfg.ssm_d_inner * 3 + 2 * d * cfg.ssm_d_state
+            total += d * (cfg.ssm_d_inner // cfg.ssm_headdim)
+        elif kind == "rglru":
+            w = cfg.rglru_width
+            total += 2 * d * w + 2 * w * w + w * d
+        if cfg.ffn in ("dense",):
+            total += 3 * d * cfg.d_ff
+        if cfg.ffn in ("moe", "moe+dense"):
+            total += 3 * d * cfg.d_ff * cfg.moe_experts + d * cfg.moe_experts
+        if cfg.ffn == "moe+dense":
+            total += 3 * d * (cfg.d_ff_dense or cfg.d_ff)
+    return int(total)
+
+
+# ---------------------------------------------------------------- batches
+
+def batch_specs(mesh: Mesh, batch_shape: dict) -> dict:
+    dp = dp_axes(mesh)
+    specs = {}
+    for k, v in batch_shape.items():
+        nd = len(v.shape)
+        specs[k] = fit_spec(P(dp, *([None] * (nd - 1))), v.shape, mesh)
+    return specs
+
+
+# ---------------------------------------------------------------- caches
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, caches_shape, batch: int):
+    """Decode/prefill cache shardings (see module docstring)."""
+    dp = dp_axes(mesh)
+    dp_ok = batch % axis_size(mesh, dp) == 0
+    BD = dp if dp_ok else None
+
+    def leaf_spec(path, leaf):
+        ps = path_str(path)
+        shape = leaf.shape           # leading dim = layer-stack repeats
+        nd = len(shape)
+        if ps.endswith("/k") or ps.endswith("/v"):
+            # KVCache (R, B, Hkv, S, hd): shard context dim on model
+            return P(None, BD, None, "model", None)
+        if ps.endswith("length"):
+            return P(None, BD)
+        if ps.endswith("/S"):
+            # linear state (R, B, Hv, dk, dv): heads on model (paper's
+            # head-parallelism); dk additionally on data at tiny batch
+            if dp_ok:
+                return P(None, BD, "model", None, None)
+            return P(None, None, "model", "data", None)
+        if ps.endswith("/h"):
+            return P(None, BD, "model")
+        if "conv" in ps:
+            return P(None, BD, None, "model") if nd == 4 else \
+                P(*([None] * nd))
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_shape)
+    specs = [fit_spec(leaf_spec(p, l), l.shape, mesh) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------- apply
+
+def make_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

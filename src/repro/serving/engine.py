@@ -1,0 +1,133 @@
+"""Continuous-batching decode engine with persistent per-slot recurrent state.
+
+This is the serving-side embodiment of the paper: every layer's recurrent
+state (GDN S-matrices / SSD states / RG-LRU vectors) and KV caches live in
+*donated* device buffers with a slot axis — XLA updates them in place every
+tick, so state never leaves HBM and is touched exactly once per token by the
+fused decode step (the TPU analogue of the FPGA's BRAM-resident state).
+
+Scheduler: admit-on-free-slot continuous batching —
+  1. each engine tick admits queued requests into free slots (per-request
+     prefill, then the caches are scattered into the batched slot buffers);
+  2. one batched decode step advances *all* active slots;
+  3. finished slots (EOS or max_new_tokens) are freed immediately.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: Optional[np.ndarray] = None         # (T,) int32 token ids
+    prompt_embeds: Optional[np.ndarray] = None  # (T, d_model) — stub
+                                                # frontends (vlm/audio)
+    max_new_tokens: int = 16
+    temperature: float = 0.0            # 0 => greedy
+    eos_id: Optional[int] = None
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.caches = lm.init_caches(cfg, max_slots, max_len)
+        self.free: List[int] = list(range(max_slots))
+        self.active: Dict[int, Request] = {}
+        self.queue: List[Request] = []
+        self.tokens = jnp.zeros((max_slots,), jnp.int32)
+        self.rng = np.random.default_rng(seed)
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(p, cfg, t, c),
+            donate_argnums=(2,))
+        self._prefill = jax.jit(
+            lambda p, t, c: lm.prefill(p, cfg, c, tokens=t))
+        self._prefill_embeds = jax.jit(
+            lambda p, e, c: lm.prefill(p, cfg, c, embeds=e))
+        self.ticks = 0
+
+    # ------------------------------------------------------------- admit
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self._all: List[Request] = getattr(self, "_all", [])
+        self._all.append(req)
+
+    def _scatter_slot(self, slot: int, one_caches):
+        """Write a single-sequence cache pytree into batch position `slot`.
+        Cache leaves are (repeats, batch, ...)."""
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, slot].set(
+                one[:, 0].astype(full.dtype)),
+            self.caches, one_caches)
+
+    def _admit(self):
+        while self.queue and self.free:
+            slot = self.free.pop(0)
+            req = self.queue.pop(0)
+            one = lm.init_caches(self.cfg, 1, self.max_len)
+            if req.prompt_embeds is not None:
+                logits, one = self._prefill_embeds(
+                    self.params,
+                    jnp.asarray(req.prompt_embeds,
+                                jnp.dtype(self.cfg.act_dtype))[None],
+                    one)
+            else:
+                logits, one = self._prefill(
+                    self.params, jnp.asarray(req.prompt)[None, :], one)
+            self._scatter_slot(slot, one)
+            tok = self._sample(np.asarray(logits)[0], req)
+            req.output.append(int(tok))
+            self.tokens = self.tokens.at[slot].set(int(tok))
+            self.active[slot] = req
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits))
+        p = logits / req.temperature
+        p = np.exp(p - p.max())
+        p = p / p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------- tick
+    def step(self):
+        """One engine tick: admit, batched decode, emit, free."""
+        self._admit()
+        if not self.active:
+            return
+        logits, self.caches = self._decode(self.params, self.tokens,
+                                           self.caches)
+        logits = np.asarray(logits)
+        self.ticks += 1
+        new_tokens = np.array(self.tokens)   # mutable copy
+        for slot, req in list(self.active.items()):
+            tok = self._sample(logits[slot], req)
+            req.output.append(tok)
+            new_tokens[slot] = tok
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                req.done = True
+                del self.active[slot]
+                self.free.append(slot)
+        self.tokens = jnp.asarray(new_tokens)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and not self.active:
+                break
+            self.step()
+        return [r for r in getattr(self, "_all", []) if r.done]

@@ -1,0 +1,215 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+def gdn_inputs(seed, B, Hk, Hv, d_k, d_v, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q = jax.random.normal(ks[0], (B, Hk, d_k), dtype)
+    k = jax.random.normal(ks[1], (B, Hk, d_k), dtype)
+    k = k / jnp.linalg.norm(k.astype(jnp.float32), axis=-1,
+                            keepdims=True).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hv, d_v), dtype)
+    S = (jax.random.normal(ks[3], (B, Hv, d_k, d_v)) * 0.2).astype(jnp.float32)
+    g = jax.nn.sigmoid(jax.random.normal(ks[4], (B, Hv)))
+    beta = jax.nn.sigmoid(jax.random.normal(ks[5], (B, Hv)))
+    return q, k, v, S, g, beta
+
+
+# ----------------------------------------------------------------- gdn_decode
+
+@pytest.mark.parametrize("head_block", [2, 4, 8, 16])
+def test_gdn_decode_head_block_sweep(head_block):
+    """The paper's H_iter knob: all head blockings give identical results."""
+    q, k, v, S, g, beta = gdn_inputs(0, B=2, Hk=8, Hv=16, d_k=128, d_v=128)
+    o, S_new = ops.gdn_decode(q, k, v, S, g, beta, head_block=head_block)
+    o_ref, S_ref = ref.gdn_decode_ref(q, k, v, S, g, beta)
+    np.testing.assert_allclose(o, o_ref, **tol(q.dtype))
+    np.testing.assert_allclose(S_new, S_ref, **tol(q.dtype))
+
+
+@pytest.mark.parametrize("B,Hk,Hv,d_k,d_v", [
+    (1, 1, 1, 128, 128),
+    (1, 16, 32, 128, 128),     # the paper's Qwen3-Next layer config
+    (4, 2, 4, 64, 64),
+    (2, 4, 4, 128, 64),        # R=1, rectangular (mamba2-like)
+])
+def test_gdn_decode_shapes(B, Hk, Hv, d_k, d_v):
+    q, k, v, S, g, beta = gdn_inputs(1, B, Hk, Hv, d_k, d_v)
+    hb = min(8, Hv)
+    o, S_new = ops.gdn_decode(q, k, v, S, g, beta, head_block=hb)
+    o_ref, S_ref = ref.gdn_decode_ref(q, k, v, S, g, beta)
+    np.testing.assert_allclose(o, o_ref, **tol(q.dtype))
+    np.testing.assert_allclose(S_new, S_ref, **tol(q.dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gdn_decode_dtypes(dtype):
+    q, k, v, S, g, beta = gdn_inputs(2, 2, 4, 8, 128, 128, dtype)
+    o, S_new = ops.gdn_decode(q, k, v, S, g, beta, head_block=4)
+    o_ref, S_ref = ref.gdn_decode_ref(q, k, v, S, g, beta)
+    assert o.dtype == dtype
+    assert S_new.dtype == jnp.float32          # state stays fp32 (paper)
+    np.testing.assert_allclose(o.astype(jnp.float32),
+                               o_ref.astype(jnp.float32), **tol(dtype))
+    np.testing.assert_allclose(S_new, S_ref, **tol(dtype))
+
+
+def test_gdn_decode_ssd_mode():
+    """delta_rule=False == mamba2/SSD decode update."""
+    q, k, v, S, g, _ = gdn_inputs(3, 2, 4, 4, 128, 64)
+    o, S_new = ops.gdn_decode(q, k, v, S, g, g, head_block=4,
+                              delta_rule=False)
+    o_ref, S_ref = ref.gdn_decode_ref(q, k, v, S, g, g, delta_rule=False)
+    np.testing.assert_allclose(o, o_ref, **tol(q.dtype))
+    np.testing.assert_allclose(S_new, S_ref, **tol(q.dtype))
+
+
+def test_gdn_decode_multi_token_trajectory():
+    """Kernel applied T times == sequential oracle over T tokens (state
+    persistence across invocations is exact)."""
+    B, Hk, Hv, d = 1, 2, 4, 64
+    T = 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    qs = jax.random.normal(ks[0], (T, B, Hk, d))
+    kk = jax.random.normal(ks[1], (T, B, Hk, d))
+    kk = kk / jnp.linalg.norm(kk, axis=-1, keepdims=True)
+    vs = jax.random.normal(ks[2], (T, B, Hv, d))
+    gs = jax.nn.sigmoid(jax.random.normal(ks[3], (T, B, Hv)))
+    bs = jax.nn.sigmoid(jax.random.normal(ks[4], (T, B, Hv)))
+    S = jnp.zeros((B, Hv, d, d))
+    S_ref = S
+    for t in range(T):
+        o, S = ops.gdn_decode(qs[t], kk[t], vs[t], S, gs[t], bs[t],
+                              head_block=4)
+        o_r, S_ref = ref.gdn_decode_ref(qs[t], kk[t], vs[t], S_ref,
+                                        gs[t], bs[t])
+        np.testing.assert_allclose(o, o_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(S, S_ref, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- gdn_prefill
+
+def prefill_inputs(seed, B, T, Hk, Hv, d_k, d_v, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q = jax.random.normal(ks[0], (B, T, Hk, d_k), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hk, d_k), dtype)
+    k = k / jnp.linalg.norm(k.astype(jnp.float32), axis=-1,
+                            keepdims=True).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, Hv, d_v), dtype)
+    log_g = -jax.nn.softplus(jax.random.normal(ks[3], (B, T, Hv)))
+    beta = jax.nn.sigmoid(jax.random.normal(ks[4], (B, T, Hv)))
+    S0 = (jax.random.normal(ks[5], (B, Hv, d_k, d_v)) * 0.1)
+    return q, k, v, log_g, beta, S0
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (64, 16), (64, 64)])
+@pytest.mark.parametrize("delta_rule", [True, False])
+def test_gdn_prefill_vs_sequential(T, chunk, delta_rule):
+    q, k, v, log_g, beta, S0 = prefill_inputs(7, 2, T, 2, 4, 32, 32)
+    O, S = ops.gdn_prefill(q, k, v, log_g, beta, S0, chunk=chunk,
+                           delta_rule=delta_rule)
+    # oracle works on (BH, T, d) layout
+    B, _, Hk, d_k = q.shape
+    Hv = v.shape[2]
+    R = Hv // Hk
+    qh = jnp.repeat(q.transpose(0, 2, 1, 3), R, 1).reshape(B * Hv, T, d_k)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), R, 1).reshape(B * Hv, T, d_k)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hv, T, -1)
+    lgh = log_g.transpose(0, 2, 1).reshape(B * Hv, T)
+    bh = beta.transpose(0, 2, 1).reshape(B * Hv, T)
+    S0h = S0.reshape(B * Hv, d_k, -1)
+    O_ref, S_ref = ref.gdn_prefill_ref(qh, kh, vh, lgh, bh, S0h,
+                                       delta_rule=delta_rule)
+    O_ref = O_ref.reshape(B, Hv, T, -1).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(O, O_ref, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(S.reshape(S0h.shape), S_ref,
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_gdn_prefill_then_decode_consistency():
+    """Prefill kernel state handoff feeds the decode kernel correctly."""
+    B, T, Hk, Hv, d = 1, 32, 2, 4, 32
+    q, k, v, log_g, beta, S0 = prefill_inputs(9, B, T, Hk, Hv, d, d)
+    S0 = jnp.zeros_like(S0)
+    O, S = ops.gdn_prefill(q, k, v, log_g, beta, S0, chunk=8)
+    # one more decode token via the decode kernel
+    o2, S2 = ops.gdn_decode(q[:, 0], k[:, 0], v[:, 0], S,
+                            jnp.exp(log_g[:, 0]), beta[:, 0], head_block=4)
+    # oracle: sequential over T+1 tokens
+    qh = jnp.concatenate([q, q[:, :1]], 1)
+    kh = jnp.concatenate([k, k[:, :1]], 1)
+    vh = jnp.concatenate([v, v[:, :1]], 1)
+    lgh = jnp.concatenate([log_g, log_g[:, :1]], 1)
+    bh = jnp.concatenate([beta, beta[:, :1]], 1)
+    R = Hv // Hk
+    qr = jnp.repeat(qh.transpose(0, 2, 1, 3), R, 1).reshape(B * Hv, T + 1, d)
+    kr = jnp.repeat(kh.transpose(0, 2, 1, 3), R, 1).reshape(B * Hv, T + 1, d)
+    vr = vh.transpose(0, 2, 1, 3).reshape(B * Hv, T + 1, d)
+    lgr = lgh.transpose(0, 2, 1).reshape(B * Hv, T + 1)
+    br = bh.transpose(0, 2, 1).reshape(B * Hv, T + 1)
+    O_ref, S_ref = ref.gdn_prefill_ref(qr, kr, vr, lgr, br,
+                                       S0.reshape(B * Hv, d, d))
+    np.testing.assert_allclose(o2.reshape(B * Hv, d), O_ref[:, -1],
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(S2.reshape(B * Hv, d, d), S_ref,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_gdn_prefill_strong_gating():
+    q, k, v, log_g, beta, S0 = prefill_inputs(11, 1, 64, 2, 2, 32, 32)
+    O, S = ops.gdn_prefill(q, k, v, log_g * 25.0, beta, S0, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(O)))
+    assert bool(jnp.all(jnp.isfinite(S)))
+
+
+# ---------------------------------------------------------------- attn_decode
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,d", [
+    (2, 8, 2, 512, 64),
+    (1, 32, 8, 1024, 128),     # GQA 4:1
+    (2, 4, 4, 256, 64),        # MHA
+])
+def test_attn_decode_vs_ref(B, Hq, Hkv, T, d):
+    ks = jax.random.split(jax.random.PRNGKey(13), 4)
+    q = jax.random.normal(ks[0], (B, Hq, d))
+    kc = jax.random.normal(ks[1], (B, Hkv, T, d))
+    vc = jax.random.normal(ks[2], (B, Hkv, T, d))
+    length = jax.random.randint(ks[3], (B,), T // 4, T + 1)
+    o = ops.attn_decode(q, kc, vc, length, block_t=128)
+    o_ref = ref.attn_decode_ref(q, kc, vc, length)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_attn_decode_sliding_window():
+    B, Hq, Hkv, T, d = 2, 4, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(17), 4)
+    q = jax.random.normal(ks[0], (B, Hq, d))
+    kc = jax.random.normal(ks[1], (B, Hkv, T, d))
+    vc = jax.random.normal(ks[2], (B, Hkv, T, d))
+    length = jnp.array([500, 300], jnp.int32)
+    o = ops.attn_decode(q, kc, vc, length, block_t=128, window=128)
+    o_ref = ref.attn_decode_ref(q, kc, vc, length, window=128)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_attn_decode_block_sweep():
+    B, Hq, Hkv, T, d = 1, 8, 4, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(19), 3)
+    q = jax.random.normal(ks[0], (B, Hq, d))
+    kc = jax.random.normal(ks[1], (B, Hkv, T, d))
+    vc = jax.random.normal(ks[2], (B, Hkv, T, d))
+    length = jnp.array([512], jnp.int32)
+    outs = [ops.attn_decode(q, kc, vc, length, block_t=bt)
+            for bt in (64, 128, 256, 512)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-4)

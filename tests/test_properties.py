@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gdn
+from repro.kernels import ops, ref
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=list(hypothesis.HealthCheck))
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.sampled_from([8, 16, 32, 64, 128]),
+    g=st.floats(0.0, 1.0),
+    beta=st.floats(0.0, 1.0),
+)
+def test_fused_equals_naive_property(seed, d, g, beta):
+    """Alg. 2 == Alg. 1 for any state, any gate values in [0, 1]."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (d,))
+    k = jax.random.normal(ks[1], (d,))
+    v = jax.random.normal(ks[2], (d,))
+    S = jax.random.normal(ks[3], (d, d))
+    o1, S1 = gdn.decode_step_naive(q, k, v, S, jnp.float32(g),
+                                   jnp.float32(beta))
+    o2, S2 = gdn.decode_step_fused(q, k, v, S, jnp.float32(g),
+                                   jnp.float32(beta))
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(S1, S2, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    n_chunks=st.integers(1, 4),
+    chunk=st.sampled_from([4, 8, 16]),
+    delta_rule=st.booleans(),
+)
+def test_chunkwise_invariant_to_chunking(seed, n_chunks, chunk, delta_rule):
+    """Chunk size is a pure performance knob — results must not change."""
+    T, d = n_chunks * 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q = jax.random.normal(ks[0], (T, d))
+    k = jax.random.normal(ks[1], (T, d))
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    v = jax.random.normal(ks[2], (T, d))
+    log_g = -jax.nn.softplus(jax.random.normal(ks[3], (T,)))
+    beta = jax.nn.sigmoid(jax.random.normal(ks[4], (T,)))
+    S0 = jax.random.normal(ks[5], (d, d)) * 0.1
+    O_a, S_a = gdn.prefill_chunkwise(q, k, v, log_g, beta, S0, chunk=chunk,
+                                     delta_rule=delta_rule)
+    O_b, S_b = gdn.prefill_chunkwise(q, k, v, log_g, beta, S0, chunk=T,
+                                     delta_rule=delta_rule)
+    np.testing.assert_allclose(O_a, O_b, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(S_a, S_b, rtol=5e-4, atol=5e-4)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_state_norm_bounded(seed):
+    """With L2-normalized keys and g, beta in (0,1) the GDN state update is
+    non-expansive in the key direction: retrieval error decays."""
+    d = 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    k = jax.random.normal(ks[0], (d,))
+    k = k / jnp.linalg.norm(k)
+    v = jax.random.normal(ks[1], (d,))
+    S = jax.random.normal(ks[2], (d, d))
+    beta = jnp.float32(0.9)
+    # repeated writes of the same (k, v) converge S^T k -> v (g=1)
+    err_prev = jnp.inf
+    for _ in range(5):
+        _, S = gdn.decode_step_fused(k, k, v, S, jnp.float32(1.0), beta)
+        err = float(jnp.linalg.norm(S.T @ k - v))
+        assert err <= err_prev * (1 + 1e-5)
+        err_prev = err
+    assert err_prev < 1e-2
+
+
+@hypothesis.settings(max_examples=10, deadline=None,
+                     suppress_health_check=list(hypothesis.HealthCheck))
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    hb=st.sampled_from([2, 4]),   # must be a multiple of the GVA ratio (R=2)
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_kernel_matches_ref_property(seed, hb, dtype):
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    B, Hk, Hv, d = 1, 2, 4, 32
+    q = jax.random.normal(ks[0], (B, Hk, d)).astype(dt)
+    k = jax.random.normal(ks[1], (B, Hk, d)).astype(dt)
+    v = jax.random.normal(ks[2], (B, Hv, d)).astype(dt)
+    S = (jax.random.normal(ks[3], (B, Hv, d, d)) * 0.2)
+    g = jax.nn.sigmoid(jax.random.normal(ks[4], (B, Hv)))
+    beta = jax.nn.sigmoid(jax.random.normal(ks[5], (B, Hv)))
+    o, S_new = ops.gdn_decode(q, k, v, S, g, beta, head_block=hb)
+    o_r, S_r = ref.gdn_decode_ref(q, k, v, S, g, beta)
+    tol = 3e-2 if dt == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(o.astype(jnp.float32),
+                               o_r.astype(jnp.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(S_new, S_r, rtol=tol, atol=tol)
+
+
+@hypothesis.settings(max_examples=10, deadline=None,
+                     suppress_health_check=list(hypothesis.HealthCheck))
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.floats(0.1, 1.0),
+)
+def test_attn_decode_length_property(seed, frac):
+    """Output must only depend on cache[:length] (masking correctness)."""
+    B, Hq, Hkv, T, d = 1, 4, 2, 256, 32
+    length = jnp.array([max(1, int(frac * T))], jnp.int32)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, Hq, d))
+    kc = jax.random.normal(ks[1], (B, Hkv, T, d))
+    vc = jax.random.normal(ks[2], (B, Hkv, T, d))
+    o1 = ops.attn_decode(q, kc, vc, length, block_t=64)
+    # scribble beyond `length` — result must be identical
+    noise = jax.random.normal(ks[3], (B, Hkv, T, d)) * 100
+    mask = (jnp.arange(T) >= length[0])[None, None, :, None]
+    kc2 = jnp.where(mask, noise, kc)
+    vc2 = jnp.where(mask, noise, vc)
+    o2 = ops.attn_decode(q, kc2, vc2, length, block_t=64)
+    np.testing.assert_allclose(o1, o2, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,45 @@
+"""Beyond-paper bf16 recurrent state: traffic halves, accuracy quantified."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+
+
+@pytest.mark.parametrize("arch", ["qwen3-next-gdn", "mamba2-1.3b"])
+def test_bf16_state_decode_close_to_fp32(arch):
+    cfg32 = configs.get_arch(arch).reduced()
+    cfg16 = cfg32.replace(state_dtype="bfloat16")
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg32)
+    B, T = 2, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                cfg32.vocab)
+
+    def rollout(cfg):
+        caches = lm.init_caches(cfg, B, max_len=64)
+        _, caches = lm.prefill(params, cfg, caches, tokens=tokens[:, :16])
+        outs = []
+        tok = tokens[:, 16]
+        for t in range(6):
+            logits, caches = lm.decode_step(params, cfg, tok, caches)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs.append(logits)
+        return jnp.stack(outs), caches
+
+    lo32, c32 = rollout(cfg32)
+    lo16, c16 = rollout(cfg16)
+    # state dtype halved, leaf by leaf (cache trees are structurally equal)
+    n_state = 0
+    for a32, a16 in zip(jax.tree.leaves(c32), jax.tree.leaves(c16)):
+        if a16.dtype == jnp.bfloat16 and a32.dtype == jnp.float32:
+            assert a32.nbytes == 2 * a16.nbytes
+            n_state += 1
+    assert n_state, "bf16 state not present"
+    # logits stay close over a short greedy rollout
+    rel = float(jnp.max(jnp.abs(lo16 - lo32))
+                / (jnp.max(jnp.abs(lo32)) + 1e-9))
+    assert rel < 0.08, f"bf16 state diverged: rel={rel}"
+    # greedy tokens agree on the first decode steps
+    assert jnp.array_equal(jnp.argmax(lo16[0], -1), jnp.argmax(lo32[0], -1))
