@@ -9,19 +9,7 @@ from __future__ import annotations
 from benchmarks.common import VMEM_BYTES, emit
 from benchmarks.bench_table34_headblock import vmem_working_set
 from repro import configs
-
-
-def arch_state_bytes(cfg) -> int:
-    total = 0
-    for kind in cfg.layer_kinds:
-        if kind == "gdn":
-            total += cfg.gdn_v_heads * cfg.gdn_head_dim ** 2 * 4
-        elif kind == "ssm":
-            nheads = cfg.ssm_d_inner // cfg.ssm_headdim
-            total += nheads * cfg.ssm_d_state * cfg.ssm_headdim * 4
-        elif kind == "rglru":
-            total += cfg.rglru_width * 4
-    return total
+from repro.core.intensity import arch_state_bytes, mixer_state_bytes
 
 
 def run():
@@ -31,10 +19,11 @@ def run():
              f"vmem_kb={ws/1024:.0f};frac_of_vmem={ws/VMEM_BYTES:.4f};"
              f"paper_bram_frac={{2:0.12,4:0.25,8:0.25,16:0.25}}[{hb}]")
     # Eq. 8 precondition per arch: recurrent state per layer vs VMEM
+    # (byte sizes come from the mixers' declarative cache specs)
     for name in ("qwen3-next-gdn", "mamba2-1.3b", "recurrentgemma-2b"):
         cfg = configs.get_arch(name)
         per_layer = arch_state_bytes(cfg) / max(
-            1, sum(k in ("gdn", "ssm", "rglru") for k in cfg.layer_kinds))
+            1, sum(mixer_state_bytes(cfg, k) > 0 for k in cfg.layer_kinds))
         emit(f"table6/state_{name}", 0.0,
              f"state_per_layer_mb={per_layer/2**20:.2f};"
              f"fits_vmem={per_layer < VMEM_BYTES};"

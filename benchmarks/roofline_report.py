@@ -106,11 +106,39 @@ def bottleneck_notes(cells):
     return "\n".join(out)
 
 
+def state_table():
+    """Per-arch persistent-state budget + batch-1 decode intensity, derived
+    from the mixers' declarative cache specs (the same source of truth the
+    model and serving engine are built on — no duplicated byte formulas)."""
+    from repro import configs
+    from repro.core import intensity
+    lines = [
+        "| arch | persistent state | decode intensity (HBM round-trip) "
+        "| decode intensity (persistent) |",
+        "|---|---|---|---|",
+    ]
+    for name in sorted(configs.ARCHS):
+        cfg = configs.get_arch(name)
+        sb = intensity.arch_state_bytes(cfg)
+        rt = intensity.arch_decode_profile(cfg, persistent=False)
+        ps = intensity.arch_decode_profile(cfg, persistent=True)
+        lines.append(f"| {name} | {sb / 2**20:.2f} MiB "
+                     f"| {rt.intensity:.2f} FLOP/B "
+                     f"| {ps.intensity:.2f} FLOP/B |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--notes", action="store_true")
+    ap.add_argument("--state", action="store_true",
+                    help="print the spec-derived persistent-state table "
+                         "(no dry-run JSONs needed)")
     args = ap.parse_args()
+    if args.state:
+        print(state_table())
+        return
     cells = load(args.dir)
     print(make_table(cells))
     if args.notes:

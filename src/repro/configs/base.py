@@ -93,13 +93,17 @@ class ArchConfig:
 
     @property
     def uses_attention(self) -> bool:
-        return any(k in ("attn", "swa") for k in self.layer_kinds)
+        """Any softmax-attention mixer in the pattern (per the registry's
+        declarative `is_attention` flag — new kinds classify themselves)."""
+        from repro.models.mixers import get_mixer
+        return any(get_mixer(k).is_attention for k in self.layer_kinds)
 
     @property
     def pure_full_attention(self) -> bool:
-        """True when every mixer is unwindowed softmax attention (O(n) KV)."""
-        kinds = set(self.layer_kinds)
-        return kinds == {"attn"}
+        """True when every mixer has O(n) decode state (unwindowed softmax
+        attention) — no fixed-size persistent state anywhere."""
+        from repro.models.mixers import get_mixer
+        return all(get_mixer(k).quadratic for k in self.layer_kinds)
 
     def replace(self, **kw) -> "ArchConfig":
         return dataclasses.replace(self, **kw)

@@ -77,6 +77,59 @@ def rglru_profile(width=2560, w=4, persistent=False) -> Profile:
     return Profile("rglru", flops, state, token)
 
 
+# ---------------------------------------------------------------------------
+# Spec-driven profiles: derive state bytes / intensity for a *config* from
+# the same declarative `cache_spec` the model and serving engine are built
+# on (single source of truth — no per-kind byte formulas duplicated here).
+# ---------------------------------------------------------------------------
+
+def mixer_cache_spec(cfg, kind: str, *, batch: int = 1, max_len: int = 4096):
+    """The declarative cache spec of one mixer layer of `cfg`."""
+    from repro.models.mixers import get_mixer
+    return get_mixer(kind).cache_spec(cfg, batch, max_len)
+
+
+def mixer_state_bytes(cfg, kind: str) -> int:
+    """Fixed-size persistent recurrent state of one layer (batch 1)."""
+    return mixer_cache_spec(cfg, kind).state_bytes
+
+
+def arch_state_bytes(cfg) -> int:
+    """Whole-model persistent-state budget (batch 1) — the paper's Eq. 8
+    'does the state fit on chip' precondition, summed over layers."""
+    return sum(mixer_state_bytes(cfg, k) for k in cfg.layer_kinds)
+
+
+def mixer_decode_profile(cfg, kind: str, *, seq: int = 4096,
+                         persistent: bool = False) -> Profile:
+    """Batch-1 decode profile of one mixer layer of `cfg`.
+
+    Off-chip state traffic = `state_passes` (declared by the mixer: reads +
+    writes per token on a round-trip backend) x the spec's state bytes, plus
+    one read of any context-sized window/KV buffers.  `persistent=True`
+    zeroes the fixed-state term (the paper's accelerator), leaving only the
+    irreducible window/KV and token I/O.
+    """
+    from repro.models.mixers import get_mixer
+    m = get_mixer(kind)
+    spec = m.cache_spec(cfg, 1, seq)
+    state = 0.0 if persistent else float(m.state_passes * spec.state_bytes)
+    state += float(spec.window_bytes)       # KV / rolling window read
+    return Profile(kind, float(m.decode_flops(cfg, seq)), state,
+                   float(m.decode_token_bytes(cfg)))
+
+
+def arch_decode_profile(cfg, *, seq: int = 4096,
+                        persistent: bool = False) -> Profile:
+    """Whole-model batch-1 decode profile: per-layer profiles summed over
+    the cycled pattern."""
+    ps = [mixer_decode_profile(cfg, k, seq=seq, persistent=persistent)
+          for k in cfg.layer_kinds]
+    return Profile(cfg.name, sum(p.flops for p in ps),
+                   sum(p.state_bytes for p in ps),
+                   sum(p.token_bytes for p in ps))
+
+
 def paper_table2() -> dict:
     """Reproduce paper Table II (h_v=32, d=128, FP32)."""
     gpu = gdn_profile(persistent=False, fused=False)

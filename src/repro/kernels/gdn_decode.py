@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(q_ref, k_ref, v_ref, s_ref, g_ref, b_ref, o_ref, s_out_ref, *,
             head_block: int, n_rep: int, scale: float, delta_rule: bool):
@@ -106,7 +108,7 @@ def gdn_decode_pallas(q, k, v, S, g, beta, *, head_block: int = 8,
         out_specs=out_specs,
         out_shape=out_shape,
         input_output_aliases={3: 1},               # S updated in place
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL)),
         interpret=interpret,
         name=f"gdn_decode_hb{hb}",

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _nilpotent_inv_apply(A, rhs, chunk):
     """Compute (I + A)^{-1} @ rhs for strictly-lower-triangular A, exactly."""
@@ -136,7 +138,7 @@ def gdn_prefill_pallas(q, k, v, log_g, beta, S0, *, chunk: int = 64,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((d_k, d_v), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)),
         interpret=interpret,
         name=f"gdn_prefill_c{chunk}",

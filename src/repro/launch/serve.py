@@ -35,6 +35,11 @@ def main():
     params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
     engine = DecodeEngine(cfg, params, max_slots=args.slots,
                           max_len=args.max_len, seed=args.seed)
+    # per-slot budgets straight from the mixers' declarative cache specs
+    print(f"engine: {args.slots} slots x "
+          f"(persistent state {engine.state_bytes_per_slot / 2**10:.1f} KiB"
+          f" + window/KV {engine.window_bytes_per_slot / 2**10:.1f} KiB)"
+          f" = {engine.cache_bytes / 2**20:.2f} MiB slot buffers")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 17),

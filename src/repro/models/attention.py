@@ -131,16 +131,6 @@ def attn_train(p, x, *, rope_theta=10000.0, window=None, block_kv=512,
     return jnp.einsum("bthk,hkd->btd", o, p["wo"]).astype(x.dtype)
 
 
-def init_kv_cache(batch, n_kv_heads, head_dim, max_len, *, window=None,
-                  dtype=jnp.float32):
-    size = max_len if window is None else min(window, max_len)
-    return KVCache(
-        k=jnp.zeros((batch, n_kv_heads, size, head_dim), dtype),
-        v=jnp.zeros((batch, n_kv_heads, size, head_dim), dtype),
-        length=jnp.zeros((batch,), jnp.int32),
-    )
-
-
 def attn_prefill(p, x, cache: KVCache, *, rope_theta=10000.0, window=None,
                  block_kv=512, head_mask=None):
     """Run full attention over the prompt and populate the cache.

@@ -65,15 +65,6 @@ def _proj(p, x):
     return q, k, v, log_g, beta
 
 
-def init_gdn_state(batch, n_v_heads, head_dim, d_v=None,
-                   dtype=jnp.float32):
-    """dtype=bf16 halves decode state traffic (beyond-paper; paper is fp32).
-    The delta rule's error correction partially compensates the rounding —
-    accuracy tradeoff quantified in tests/test_state_dtype.py."""
-    d_v = head_dim if d_v is None else d_v
-    return GDNState(S=jnp.zeros((batch, n_v_heads, head_dim, d_v), dtype))
-
-
 def gdn_train(p, x, *, chunk=64):
     """Full-sequence gated delta rule (differentiable chunkwise path)."""
     B, T, _ = x.shape
@@ -105,14 +96,17 @@ def gdn_prefill(p, x, state: GDNState, *, chunk=64, use_pallas=False):
     return out, GDNState(S=S)
 
 
-def gdn_decode(p, x_t, state: GDNState, *, use_pallas=False, head_block=8):
-    """One-token fused decode step (paper Alg. 2). x_t: (B, d_model)."""
+def gdn_decode(p, x_t, state: GDNState, *, use_pallas=False, head_block=8,
+               fused=True):
+    """One-token decode step: paper Alg. 2 (fused, default) or the Alg. 1
+    three-pass reference (`fused=False`, the `gdn_naive` registry kind —
+    XLA path only). x_t: (B, d_model)."""
     x = x_t[:, None, :]
     q, k, v, log_g, beta = _proj(p, x)
     q, k, v = q[:, 0], k[:, 0], v[:, 0]
     g = jnp.exp(log_g[:, 0])
     beta = beta[:, 0]
-    if use_pallas:
+    if use_pallas and fused:
         from repro.kernels import ops
         o, S = ops.gdn_decode(q, k, v, state.S, g, beta,
                               head_block=head_block)
@@ -121,7 +115,7 @@ def gdn_decode(p, x_t, state: GDNState, *, use_pallas=False, head_block=8):
                                    k.astype(jnp.float32),
                                    v.astype(jnp.float32),
                                    state.S.astype(jnp.float32), g, beta,
-                                   fused=True)
+                                   fused=fused)
         o = o.astype(x_t.dtype)
         S = S.astype(state.S.dtype)
     out = jnp.einsum("bhk,hkd->bd", o, p["wo"]).astype(x_t.dtype)

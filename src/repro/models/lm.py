@@ -1,15 +1,23 @@
 """Unified hybrid causal LM driving all assigned architectures.
 
-A model is a cycled ``pattern`` of mixer kinds (attn / swa / gdn / ssm /
-rglru) plus a per-layer FFN (dense / moe / moe+dense / none).  Layers are
-grouped into (pattern, repeats) groups and executed with ``lax.scan`` over
-stacked parameters — compile time stays O(pattern) instead of O(n_layers)
-for the 60-layer archs, and remat wraps each scanned block.
+A model is a cycled ``pattern`` of mixer kinds (any kind registered in
+``repro.models.mixers`` — attn / swa / gdn / ssm / rglru / gdn_naive / ...)
+plus a per-layer FFN (dense / moe / moe+dense / none).  Layers are grouped
+into (pattern, repeats) groups and executed with ``lax.scan`` over stacked
+parameters — compile time stays O(pattern) instead of O(n_layers) for the
+60-layer archs, and remat wraps each scanned block.
+
+Mixer dispatch is a registry lookup: this module never names a mixer kind.
+Adding a kind is one module in ``repro.models.mixers`` implementing the
+``SequenceMixer`` protocol; caches are materialized from each mixer's
+declarative ``cache_spec`` (see ``cache_specs`` below), which is the same
+source of truth the serving engine and the intensity model consume.
 
 Entry points:
   init_lm(key, cfg)                         -> params
   forward_hidden(params, cfg, tokens|embeds)-> (B, T, d) final hidden
   loss_fn(params, cfg, batch)               -> scalar loss, metrics  (chunked CE)
+  cache_specs(cfg, batch, max_len)          -> CacheSpec (declarative, stacked)
   init_caches(cfg, batch, max_len)          -> decode caches (per group, stacked)
   prefill(params, cfg, tokens|embeds, caches)-> (last-token logits, caches)
   decode_step(params, cfg, token, caches)   -> (logits, caches)
@@ -28,7 +36,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.models import attention, gdn_layer, layers, moe, rglru, ssm
+from repro.models import layers, moe
+from repro.models.mixers import CacheSpec, get_mixer
 
 
 def _constrain(x, dp_axes):
@@ -55,26 +64,10 @@ def build_groups(cfg: ArchConfig) -> List[Tuple[Tuple[str, ...], int]]:
 
 # ---------------------------------------------------------------- init
 
-def _init_mixer(key, kind: str, cfg: ArchConfig, dtype):
-    if kind in ("attn", "swa"):
-        return attention.init_attention(key, cfg.d_model, cfg.hq_eff,
-                                        cfg.hkv_eff, cfg.head_dim, dtype)
-    if kind == "gdn":
-        return gdn_layer.init_gdn(key, cfg.d_model, cfg.gdn_k_heads,
-                                  cfg.gdn_v_heads, cfg.gdn_head_dim, dtype)
-    if kind == "ssm":
-        return ssm.init_ssm(key, cfg.d_model, cfg.ssm_d_inner,
-                            cfg.ssm_headdim, cfg.ssm_d_state, dtype=dtype)
-    if kind == "rglru":
-        return rglru.init_rglru(key, cfg.d_model, cfg.rglru_width,
-                                dtype=dtype)
-    raise ValueError(kind)
-
-
 def _init_layer(key, kind: str, cfg: ArchConfig, dtype):
     ks = jax.random.split(key, 4)
     p = {"norm1": layers.init_rmsnorm(cfg.d_model),
-         "mixer": _init_mixer(ks[0], kind, cfg, dtype)}
+         "mixer": get_mixer(kind).init_params(ks[0], cfg, dtype)}
     if cfg.ffn != "none":
         p["norm2"] = layers.init_rmsnorm(cfg.d_model)
         if cfg.ffn in ("dense",):
@@ -120,33 +113,6 @@ def init_lm(key, cfg: ArchConfig):
 
 # ---------------------------------------------------------------- layer fwd
 
-def _head_mask(cfg: ArchConfig):
-    if not cfg.n_heads_pad and not cfg.n_kv_heads_pad:
-        return None
-    return jnp.asarray(cfg.head_mask())
-
-
-def _mixer_train(kind, cfg: ArchConfig, mp, h):
-    if kind == "attn":
-        return attention.attn_train(mp, h, rope_theta=cfg.rope_theta,
-                                    use_flash_kernel=cfg.use_flash_kernel,
-                                    head_mask=_head_mask(cfg))
-    if kind == "swa":
-        return attention.attn_train(mp, h, rope_theta=cfg.rope_theta,
-                                    window=cfg.window,
-                                    use_flash_kernel=cfg.use_flash_kernel,
-                                    head_mask=_head_mask(cfg))
-    if kind == "gdn":
-        return gdn_layer.gdn_train(mp, h)
-    if kind == "ssm":
-        return ssm.ssm_train(mp, h, d_inner=cfg.ssm_d_inner,
-                             headdim=cfg.ssm_headdim,
-                             d_state=cfg.ssm_d_state)
-    if kind == "rglru":
-        return rglru.rglru_train(mp, h)
-    raise ValueError(kind)
-
-
 def _ffn_fwd(cfg: ArchConfig, lp, x, decode: bool):
     if cfg.ffn == "none":
         return x, 0.0
@@ -168,7 +134,7 @@ def _ffn_fwd(cfg: ArchConfig, lp, x, decode: bool):
 
 def _layer_train(kind, cfg: ArchConfig, lp, x):
     h = layers.rmsnorm_fwd(lp["norm1"], x, cfg.norm_eps)
-    x = x + _mixer_train(kind, cfg, lp["mixer"], h)
+    x = x + get_mixer(kind).train(lp["mixer"], cfg, h)
     x, aux = _ffn_fwd(cfg, lp, x, decode=False)
     return x, aux
 
@@ -238,88 +204,27 @@ def loss_fn(params, cfg: ArchConfig, batch, *, t_chunk=1024, z_loss=1e-4,
 
 # ---------------------------------------------------------------- caches
 
-def _init_layer_cache(kind, cfg: ArchConfig, batch, max_len, dtype):
-    if kind == "attn":
-        return attention.init_kv_cache(batch, cfg.hkv_eff, cfg.head_dim,
-                                       max_len, dtype=dtype)
-    if kind == "swa":
-        return attention.init_kv_cache(batch, cfg.hkv_eff, cfg.head_dim,
-                                       max_len, window=cfg.window,
-                                       dtype=dtype)
-    if kind == "gdn":
-        return gdn_layer.init_gdn_state(batch, cfg.gdn_v_heads,
-                                        cfg.gdn_head_dim,
-                                        dtype=jnp.dtype(cfg.state_dtype))
-    if kind == "ssm":
-        return ssm.init_ssm_state(batch, cfg.ssm_d_inner, cfg.ssm_headdim,
-                                  cfg.ssm_d_state, dtype=dtype,
-                                  state_dtype=jnp.dtype(cfg.state_dtype))
-    if kind == "rglru":
-        return rglru.init_rglru_state(batch, cfg.rglru_width, dtype=dtype)
-    raise ValueError(kind)
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> CacheSpec:
+    """Declarative spec of the full decode-cache pytree, in the stacked
+    per-group layout that ``prefill``/``decode_step`` scan over: leaves are
+    (repeats, batch, ...).  The serving engine sizes its slot buffers and
+    byte budgets from this; ``init_caches`` materializes it."""
+    groups_spec = []
+    for kinds, reps in build_groups(cfg):
+        per_pos = []
+        for kind in kinds:
+            spec = get_mixer(kind).cache_spec(cfg, batch, max_len)
+            per_pos.append(spec.stack(reps).tree)
+        groups_spec.append(per_pos)
+    return CacheSpec(groups_spec)
 
 
 def init_caches(cfg: ArchConfig, batch: int, max_len: int):
     """Stacked per-group caches matching the scanned param layout."""
-    dtype = jnp.dtype(cfg.act_dtype)
-    caches = []
-    for kinds, reps in build_groups(cfg):
-        per_pos = []
-        for kind in kinds:
-            one = _init_layer_cache(kind, cfg, batch, max_len, dtype)
-            per_pos.append(jax.tree.map(
-                lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), one))
-        caches.append(per_pos)
-    return caches
+    return cache_specs(cfg, batch, max_len).zeros()
 
 
 # ---------------------------------------------------------------- prefill / decode
-
-def _mixer_prefill(kind, cfg, mp, h, cache):
-    if kind == "attn":
-        return attention.attn_prefill(mp, h, cache,
-                                      rope_theta=cfg.rope_theta,
-                                      head_mask=_head_mask(cfg))
-    if kind == "swa":
-        return attention.attn_prefill(mp, h, cache,
-                                      rope_theta=cfg.rope_theta,
-                                      window=cfg.window,
-                                      head_mask=_head_mask(cfg))
-    if kind == "gdn":
-        return gdn_layer.gdn_prefill(mp, h, cache,
-                                     use_pallas=cfg.use_pallas_serving)
-    if kind == "ssm":
-        return ssm.ssm_prefill(mp, h, cache, d_inner=cfg.ssm_d_inner,
-                               headdim=cfg.ssm_headdim,
-                               d_state=cfg.ssm_d_state,
-                               use_pallas=cfg.use_pallas_serving)
-    if kind == "rglru":
-        return rglru.rglru_prefill(mp, h, cache)
-    raise ValueError(kind)
-
-
-def _mixer_decode(kind, cfg, mp, h, cache):
-    if kind == "attn":
-        return attention.attn_decode_xla(mp, h, cache,
-                                         rope_theta=cfg.rope_theta,
-                                         head_mask=_head_mask(cfg))
-    if kind == "swa":
-        return attention.attn_decode_xla(mp, h, cache,
-                                         rope_theta=cfg.rope_theta,
-                                         window=cfg.window,
-                                         head_mask=_head_mask(cfg))
-    if kind == "gdn":
-        return gdn_layer.gdn_decode(mp, h, cache,
-                                    use_pallas=cfg.use_pallas_serving)
-    if kind == "ssm":
-        return ssm.ssm_decode(mp, h, cache, d_inner=cfg.ssm_d_inner,
-                              headdim=cfg.ssm_headdim,
-                              d_state=cfg.ssm_d_state,
-                              use_pallas=cfg.use_pallas_serving)
-    if kind == "rglru":
-        return rglru.rglru_decode(mp, h, cache)
-    raise ValueError(kind)
-
 
 def _run_cached(params, cfg: ArchConfig, x, caches, mode: str,
                 dp_axes=None):
@@ -332,13 +237,12 @@ def _run_cached(params, cfg: ArchConfig, x, caches, mode: str,
             new_c = []
             for i, kind in enumerate(kinds):
                 lp = lp_slice[i]
+                mixer = get_mixer(kind)
                 h = layers.rmsnorm_fwd(lp["norm1"], x, cfg.norm_eps)
                 if mode == "prefill":
-                    mix, nc = _mixer_prefill(kind, cfg, lp["mixer"], h,
-                                             c_slice[i])
+                    mix, nc = mixer.prefill(lp["mixer"], cfg, h, c_slice[i])
                 else:
-                    mix, nc = _mixer_decode(kind, cfg, lp["mixer"], h,
-                                            c_slice[i])
+                    mix, nc = mixer.decode(lp["mixer"], cfg, h, c_slice[i])
                 x = x + mix
                 x, _ = _ffn_fwd(cfg, lp, x, decode=(mode == "decode"))
                 x = _constrain(x, dp_axes)

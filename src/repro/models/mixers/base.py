@@ -1,0 +1,157 @@
+"""SequenceMixer protocol + declarative persistent-state cache specs.
+
+The paper's architectural claim is that every subquadratic mixer is the same
+workload: a fixed-size persistent state touched once per token.  This module
+is that claim as an interface.  A mixer kind is one class implementing
+
+  init_params(key, cfg, dtype)     -> parameter pytree
+  train(params, cfg, x)            -> (B, T, d) mixed output
+  prefill(params, cfg, x, cache)   -> ((B, T, d) out, new cache)
+  decode(params, cfg, x_t, cache)  -> ((B, d) out, new cache)
+  cache_spec(cfg, batch, max_len)  -> CacheSpec (declarative state layout)
+  init_cache(cfg, batch, max_len)  -> cache pytree (default: spec zeros)
+
+plus declarative class attributes consumed by the serving engine, the
+sharding planner and the intensity model:
+
+  kind          registry name (the string used in ArchConfig.pattern)
+  is_attention  softmax-attention family (KV cache instead of fixed state)
+  quadratic     O(T) decode state (unwindowed full attention)
+  state_passes  HBM round-trips over the persistent state per decoded token
+                on a naive (non-persistent) backend: reads + writes
+
+``CacheSpec`` mirrors the runtime cache pytree with ``ArraySpec`` leaves, so
+slot buffers, byte budgets and roofline terms are all derived from one
+declaration instead of per-kind formulas scattered across the codebase.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    """Shape/dtype/role of one cache leaf.
+
+    role: "state"  — fixed-size recurrent state (S matrices, conv carries,
+                     RG-LRU vectors): the paper's persistent state;
+          "window" — context-sized buffers read once per token (KV caches,
+                     rolling SWA windows);
+          "meta"   — bookkeeping scalars (sequence lengths), not counted in
+                     byte budgets.
+    """
+    shape: Tuple[int, ...]
+    dtype: Any
+    role: str = "state"
+
+    @property
+    def nbytes(self) -> int:
+        return int(math.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+    def stack(self, reps: int) -> "ArraySpec":
+        return ArraySpec((reps,) + tuple(self.shape), self.dtype, self.role)
+
+
+def _spec_leaves(tree):
+    return [l for l in jax.tree.leaves(tree) if isinstance(l, ArraySpec)]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """A pytree of ArraySpec leaves mirroring the runtime cache structure."""
+    tree: Any
+
+    def leaves(self):
+        return _spec_leaves(self.tree)
+
+    def zeros(self):
+        """Materialize the cache buffers this spec describes (all-zero init
+        is part of the contract: slot admit may skip clearing freed slots)."""
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)), self.tree)
+
+    def shape_dtype(self):
+        """The spec as a jax.ShapeDtypeStruct pytree (for jit.lower etc.)."""
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+            self.tree)
+
+    def stack(self, reps: int) -> "CacheSpec":
+        """Add a leading layer-stack dim to every leaf (scanned layouts)."""
+        return CacheSpec(jax.tree.map(lambda s: s.stack(reps), self.tree))
+
+    def _role_bytes(self, role: str) -> int:
+        return sum(l.nbytes for l in self.leaves() if l.role == role)
+
+    @property
+    def state_bytes(self) -> int:
+        """Fixed-size persistent recurrent state (paper Eq. 8 budget)."""
+        return self._role_bytes("state")
+
+    @property
+    def window_bytes(self) -> int:
+        """Context-sized buffers (KV / rolling windows)."""
+        return self._role_bytes("window")
+
+    @property
+    def nbytes(self) -> int:
+        """Total buffer bytes (including meta) — the HBM footprint."""
+        return sum(l.nbytes for l in self.leaves())
+
+
+class SequenceMixer:
+    """Base class for registered mixer kinds.  Subclasses override the
+    classmethods; every method takes the full ArchConfig so adding a mixer
+    never requires threading new per-kind kwargs through the model."""
+
+    kind: str = ""
+    is_attention: bool = False
+    quadratic: bool = False
+    state_passes: int = 2          # naive backend: 1 read + 1 write
+
+    @classmethod
+    def init_params(cls, key, cfg, dtype):
+        raise NotImplementedError(cls.kind)
+
+    @classmethod
+    def train(cls, params, cfg, x):
+        raise NotImplementedError(cls.kind)
+
+    @classmethod
+    def prefill(cls, params, cfg, x, cache):
+        raise NotImplementedError(cls.kind)
+
+    @classmethod
+    def decode(cls, params, cfg, x_t, cache):
+        raise NotImplementedError(cls.kind)
+
+    @classmethod
+    def cache_spec(cls, cfg, batch: int, max_len: int) -> CacheSpec:
+        raise NotImplementedError(cls.kind)
+
+    @classmethod
+    def init_cache(cls, cfg, batch: int, max_len: int):
+        return cls.cache_spec(cfg, batch, max_len).zeros()
+
+    # ---- analytical decode model (consumed by core.intensity) ----------
+
+    @classmethod
+    def decode_flops(cls, cfg, seq: int) -> float:
+        """Per-token mixer FLOPs at decode (batch 1)."""
+        raise NotImplementedError(cls.kind)
+
+    @classmethod
+    def decode_token_bytes(cls, cfg) -> float:
+        """Per-token activation I/O (q/k/v/o projections etc.)."""
+        raise NotImplementedError(cls.kind)
+
+    @classmethod
+    def param_count(cls, cfg) -> int:
+        """Mixer parameter count per layer (sharding/footprint planning)."""
+        raise NotImplementedError(cls.kind)

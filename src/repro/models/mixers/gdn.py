@@ -1,0 +1,61 @@
+"""gdn mixer kind — Gated DeltaNet, the paper's primitive, wrapping
+``repro.models.gdn_layer``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import gdn_layer
+from repro.models.mixers import register
+from repro.models.mixers.base import ArraySpec, CacheSpec, SequenceMixer
+
+
+@register
+class GatedDeltaNet(SequenceMixer):
+    kind = "gdn"
+    state_passes = 2           # fused Alg. 2: one read + one write pass
+    fused = True               # decode algorithm (Alg. 2 vs Alg. 1)
+
+    @classmethod
+    def init_params(cls, key, cfg, dtype):
+        return gdn_layer.init_gdn(key, cfg.d_model, cfg.gdn_k_heads,
+                                  cfg.gdn_v_heads, cfg.gdn_head_dim, dtype)
+
+    @classmethod
+    def train(cls, params, cfg, x):
+        return gdn_layer.gdn_train(params, x)
+
+    @classmethod
+    def prefill(cls, params, cfg, x, cache):
+        return gdn_layer.gdn_prefill(params, x, cache,
+                                     use_pallas=cfg.use_pallas_serving)
+
+    @classmethod
+    def decode(cls, params, cfg, x_t, cache):
+        return gdn_layer.gdn_decode(params, x_t, cache,
+                                    use_pallas=cfg.use_pallas_serving,
+                                    fused=cls.fused)
+
+    @classmethod
+    def cache_spec(cls, cfg, batch, max_len):
+        hd = cfg.gdn_head_dim
+        return CacheSpec(gdn_layer.GDNState(
+            S=ArraySpec((batch, cfg.gdn_v_heads, hd, hd),
+                        jnp.dtype(cfg.state_dtype), "state")))
+
+    @classmethod
+    def decode_flops(cls, cfg, seq):
+        d = cfg.gdn_head_dim
+        return cfg.gdn_v_heads * (7.0 * d * d + 8.0 * d)
+
+    @classmethod
+    def decode_token_bytes(cls, cfg):
+        w = jnp.dtype(cfg.act_dtype).itemsize
+        d = cfg.gdn_head_dim
+        return (2 * cfg.gdn_k_heads * d + 2 * cfg.gdn_v_heads * d
+                + 2 * cfg.gdn_v_heads) * w
+
+    @classmethod
+    def param_count(cls, cfg):
+        d, hd = cfg.d_model, cfg.gdn_head_dim
+        return (d * hd * (2 * cfg.gdn_k_heads + cfg.gdn_v_heads)
+                + cfg.gdn_v_heads * hd * d + 2 * d * cfg.gdn_v_heads)

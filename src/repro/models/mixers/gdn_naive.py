@@ -1,0 +1,19 @@
+"""gdn_naive mixer kind — Gated DeltaNet with the Alg. 1 three-pass decode
+step from ``repro.core.gdn`` (retrieval, update, output as separate passes
+over S).  Parameters, train and prefill are identical to ``gdn``; only the
+decode datapath differs.  Registered as the sixth kind purely as parity
+proof for the registry ("adding a mixer is one module, zero lm.py edits")
+and as the HBM-round-trip baseline in the intensity model
+(``state_passes=4``: three reads + one write, paper Table II's GPU row).
+"""
+from __future__ import annotations
+
+from repro.models.mixers import register
+from repro.models.mixers.gdn import GatedDeltaNet
+
+
+@register
+class GatedDeltaNetNaive(GatedDeltaNet):
+    kind = "gdn_naive"
+    state_passes = 4           # Alg. 1: 3 read passes + 1 write pass
+    fused = False

@@ -1,0 +1,54 @@
+"""rglru mixer kind — RG-LRU diagonal vector-state recurrence
+(RecurrentGemma), wrapping ``repro.models.rglru``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import rglru as rglru_layer
+from repro.models.mixers import register
+from repro.models.mixers.base import ArraySpec, CacheSpec, SequenceMixer
+
+_CONV_W = rglru_layer.CONV_WIDTH
+
+
+@register
+class RGLRU(SequenceMixer):
+    kind = "rglru"
+    state_passes = 2           # h <- a*h + b : one read + one write
+
+    @classmethod
+    def init_params(cls, key, cfg, dtype):
+        return rglru_layer.init_rglru(key, cfg.d_model, cfg.rglru_width,
+                                      dtype=dtype)
+
+    @classmethod
+    def train(cls, params, cfg, x):
+        return rglru_layer.rglru_train(params, x)
+
+    @classmethod
+    def prefill(cls, params, cfg, x, cache):
+        return rglru_layer.rglru_prefill(params, x, cache)
+
+    @classmethod
+    def decode(cls, params, cfg, x_t, cache):
+        return rglru_layer.rglru_decode(params, x_t, cache)
+
+    @classmethod
+    def cache_spec(cls, cfg, batch, max_len):
+        return CacheSpec(rglru_layer.RGLRUState(
+            h=ArraySpec((batch, cfg.rglru_width), jnp.float32, "state"),
+            conv=ArraySpec((batch, _CONV_W - 1, cfg.rglru_width),
+                           jnp.dtype(cfg.act_dtype), "state")))
+
+    @classmethod
+    def decode_flops(cls, cfg, seq):
+        return 8.0 * cfg.rglru_width
+
+    @classmethod
+    def decode_token_bytes(cls, cfg):
+        return 3 * cfg.rglru_width * jnp.dtype(cfg.act_dtype).itemsize
+
+    @classmethod
+    def param_count(cls, cfg):
+        d, w = cfg.d_model, cfg.rglru_width
+        return 2 * d * w + 2 * w * w + w * d

@@ -1,0 +1,75 @@
+"""ssm mixer kind — Mamba-2 / SSD, wrapping ``repro.models.ssm``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_layer
+from repro.models.mixers import register
+from repro.models.mixers.base import ArraySpec, CacheSpec, SequenceMixer
+
+_CONV_W = ssm_layer.CONV_WIDTH
+
+
+@register
+class SSD(SequenceMixer):
+    kind = "ssm"
+    state_passes = 2           # S <- g*S + B x^T : one read + one write
+
+    @classmethod
+    def init_params(cls, key, cfg, dtype):
+        return ssm_layer.init_ssm(key, cfg.d_model, cfg.ssm_d_inner,
+                                  cfg.ssm_headdim, cfg.ssm_d_state,
+                                  dtype=dtype)
+
+    @classmethod
+    def train(cls, params, cfg, x):
+        return ssm_layer.ssm_train(params, x, d_inner=cfg.ssm_d_inner,
+                                   headdim=cfg.ssm_headdim,
+                                   d_state=cfg.ssm_d_state)
+
+    @classmethod
+    def prefill(cls, params, cfg, x, cache):
+        return ssm_layer.ssm_prefill(params, x, cache,
+                                     d_inner=cfg.ssm_d_inner,
+                                     headdim=cfg.ssm_headdim,
+                                     d_state=cfg.ssm_d_state,
+                                     use_pallas=cfg.use_pallas_serving)
+
+    @classmethod
+    def decode(cls, params, cfg, x_t, cache):
+        return ssm_layer.ssm_decode(params, x_t, cache,
+                                    d_inner=cfg.ssm_d_inner,
+                                    headdim=cfg.ssm_headdim,
+                                    d_state=cfg.ssm_d_state,
+                                    use_pallas=cfg.use_pallas_serving)
+
+    @classmethod
+    def cache_spec(cls, cfg, batch, max_len):
+        nheads = cfg.ssm_d_inner // cfg.ssm_headdim
+        act = jnp.dtype(cfg.act_dtype)
+        return CacheSpec(ssm_layer.SSMState(
+            S=ArraySpec((batch, nheads, cfg.ssm_d_state, cfg.ssm_headdim),
+                        jnp.dtype(cfg.state_dtype), "state"),
+            conv_x=ArraySpec((batch, _CONV_W - 1, cfg.ssm_d_inner), act,
+                             "state"),
+            conv_B=ArraySpec((batch, _CONV_W - 1, cfg.ssm_d_state), act,
+                             "state"),
+            conv_C=ArraySpec((batch, _CONV_W - 1, cfg.ssm_d_state), act,
+                             "state")))
+
+    @classmethod
+    def decode_flops(cls, cfg, seq):
+        nheads = cfg.ssm_d_inner // cfg.ssm_headdim
+        return nheads * 5.0 * cfg.ssm_d_state * cfg.ssm_headdim
+
+    @classmethod
+    def decode_token_bytes(cls, cfg):
+        w = jnp.dtype(cfg.act_dtype).itemsize
+        nheads = cfg.ssm_d_inner // cfg.ssm_headdim
+        return nheads * (2 * cfg.ssm_d_state + 2 * cfg.ssm_headdim) * w
+
+    @classmethod
+    def param_count(cls, cfg):
+        d = cfg.d_model
+        return (d * cfg.ssm_d_inner * 3 + 2 * d * cfg.ssm_d_state
+                + d * (cfg.ssm_d_inner // cfg.ssm_headdim))

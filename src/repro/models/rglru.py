@@ -23,6 +23,10 @@ import jax.numpy as jnp
 
 from repro.models import layers
 
+# causal-conv width (RecurrentGemma block); the mixer registry's cache_spec
+# must describe carries of exactly this width
+CONV_WIDTH = 4
+
 _C = 8.0  # RecurrentGemma's fixed gate sharpness constant
 
 
@@ -31,7 +35,8 @@ class RGLRUState(NamedTuple):
     conv: jax.Array       # (B, conv_width-1, width)
 
 
-def init_rglru(key, d_model, width, conv_width=4, dtype=jnp.float32):
+def init_rglru(key, d_model, width, conv_width=CONV_WIDTH,
+               dtype=jnp.float32):
     ks = jax.random.split(key, 6)
     s = d_model ** -0.5
     sw = width ** -0.5
@@ -68,11 +73,6 @@ def _scan_rglru(log_a, gated, h0):
     a_c, b_c = jax.lax.associative_scan(combine, (a, b), axis=1)
     h = a_c * h0[:, None, :] + b_c
     return h
-
-
-def init_rglru_state(batch, width, conv_width=4, dtype=jnp.float32):
-    return RGLRUState(h=jnp.zeros((batch, width), jnp.float32),
-                      conv=jnp.zeros((batch, conv_width - 1, width), dtype))
 
 
 def rglru_train(p, x):

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from repro.core import gdn as gdn_core
 from repro.models import layers
 
+# causal-conv width (fixed, as in Mamba-2); the mixer registry's cache_spec
+# must describe carries of exactly this width
+CONV_WIDTH = 4
+
 
 class SSMState(NamedTuple):
     S: jax.Array          # (B, nheads, d_state, headdim) fp32
@@ -29,7 +33,8 @@ class SSMState(NamedTuple):
     conv_C: jax.Array     # (B, conv_width-1, d_state)
 
 
-def init_ssm(key, d_model, d_inner, headdim, d_state, conv_width=4,
+def init_ssm(key, d_model, d_inner, headdim, d_state,
+             conv_width=CONV_WIDTH,
              dtype=jnp.float32):
     nheads = d_inner // headdim
     ks = jax.random.split(key, 9)
@@ -50,17 +55,6 @@ def init_ssm(key, d_model, d_inner, headdim, d_state, conv_width=4,
         "out_proj": (jax.random.normal(ks[8], (d_inner, d_model))
                      * (d_inner ** -0.5)).astype(dtype),
     }
-
-
-def init_ssm_state(batch, d_inner, headdim, d_state, conv_width=4,
-                   dtype=jnp.float32, state_dtype=jnp.float32):
-    nheads = d_inner // headdim
-    return SSMState(
-        S=jnp.zeros((batch, nheads, d_state, headdim), state_dtype),
-        conv_x=jnp.zeros((batch, conv_width - 1, d_inner), dtype),
-        conv_B=jnp.zeros((batch, conv_width - 1, d_state), dtype),
-        conv_C=jnp.zeros((batch, conv_width - 1, d_state), dtype),
-    )
 
 
 def _silu(x):

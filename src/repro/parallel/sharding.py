@@ -188,23 +188,13 @@ def needs_fsdp(cfg: ArchConfig, mesh: Mesh, hbm_budget_gb: float = 10.0
 
 
 def estimate_params(cfg: ArchConfig) -> int:
+    from repro.models.mixers import get_mixer
     d, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
     total = V * d * (1 if cfg.tie_embeddings else 2)
     kinds = cfg.layer_kinds
     for kind in kinds:
-        if kind in ("attn", "swa"):
-            total += d * cfg.head_dim * (cfg.n_heads + 2 * cfg.n_kv_heads)
-            total += cfg.n_heads * cfg.head_dim * d
-        elif kind == "gdn":
-            hd = cfg.gdn_head_dim
-            total += d * hd * (2 * cfg.gdn_k_heads + cfg.gdn_v_heads)
-            total += cfg.gdn_v_heads * hd * d + 2 * d * cfg.gdn_v_heads
-        elif kind == "ssm":
-            total += d * cfg.ssm_d_inner * 3 + 2 * d * cfg.ssm_d_state
-            total += d * (cfg.ssm_d_inner // cfg.ssm_headdim)
-        elif kind == "rglru":
-            w = cfg.rglru_width
-            total += 2 * d * w + 2 * w * w + w * d
+        # per-mixer parameter counts are declared by the registry
+        total += get_mixer(kind).param_count(cfg)
         if cfg.ffn in ("dense",):
             total += 3 * d * cfg.d_ff
         if cfg.ffn in ("moe", "moe+dense"):

@@ -6,15 +6,24 @@ state (GDN S-matrices / SSD states / RG-LRU vectors) and KV caches live in
 tick, so state never leaves HBM and is touched exactly once per token by the
 fused decode step (the TPU analogue of the FPGA's BRAM-resident state).
 
+The slot buffers are sized and budgeted from the model's declarative
+``cache_specs`` (one ``ArraySpec`` per cache leaf, exported by each
+registered ``SequenceMixer``), so the engine is mixer-agnostic: a newly
+registered kind serves without any engine change.  Admit scatters a
+prefilled single-sequence cache into its slot with one jitted, donated
+``dynamic_update_slice`` over the whole pytree — the buffers are updated
+on-device in place instead of rebuilt leaf-by-leaf on the host.
+
 Scheduler: admit-on-free-slot continuous batching —
   1. each engine tick admits queued requests into free slots (per-request
      prefill, then the caches are scattered into the batched slot buffers);
+     a request finished by its admit-time token (EOS, or max_new_tokens=1)
+     completes immediately and never occupies a slot;
   2. one batched decode step advances *all* active slots;
   3. finished slots (EOS or max_new_tokens) are freed immediately.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -39,6 +48,16 @@ class Request:
     done: bool = False
 
 
+def _scatter_fn(full, one, slot):
+    """Write a single-sequence cache pytree into batch position `slot`.
+    Leaves are (repeats, slots, ...) vs (repeats, 1, ...); `slot` is traced
+    so the whole-pytree scatter compiles once and runs in place (donated)."""
+    return jax.tree.map(
+        lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), slot, axis=1),
+        full, one)
+
+
 class DecodeEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
                  max_len: int = 256, seed: int = 0):
@@ -46,7 +65,14 @@ class DecodeEngine:
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
-        self.caches = lm.init_caches(cfg, max_slots, max_len)
+        # spec-driven slot buffers: shapes, dtypes and byte budgets all come
+        # from the mixers' declarative cache specs
+        self.spec = lm.cache_specs(cfg, max_slots, max_len)
+        self.caches = self.spec.zeros()
+        slot_spec = lm.cache_specs(cfg, 1, max_len)
+        self.state_bytes_per_slot = slot_spec.state_bytes
+        self.window_bytes_per_slot = slot_spec.window_bytes
+        self.cache_bytes = self.spec.nbytes
         self.free: List[int] = list(range(max_slots))
         self.active: Dict[int, Request] = {}
         self.queue: List[Request] = []
@@ -59,6 +85,7 @@ class DecodeEngine:
             lambda p, t, c: lm.prefill(p, cfg, c, tokens=t))
         self._prefill_embeds = jax.jit(
             lambda p, e, c: lm.prefill(p, cfg, c, embeds=e))
+        self._scatter = jax.jit(_scatter_fn, donate_argnums=(0,))
         self.ticks = 0
 
     # ------------------------------------------------------------- admit
@@ -67,17 +94,12 @@ class DecodeEngine:
         self._all: List[Request] = getattr(self, "_all", [])
         self._all.append(req)
 
-    def _scatter_slot(self, slot: int, one_caches):
-        """Write a single-sequence cache pytree into batch position `slot`.
-        Cache leaves are (repeats, batch, ...)."""
-        self.caches = jax.tree.map(
-            lambda full, one: full.at[:, slot].set(
-                one[:, 0].astype(full.dtype)),
-            self.caches, one_caches)
+    def _finished(self, req: Request, tok: int) -> bool:
+        return (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id))
 
     def _admit(self):
         while self.queue and self.free:
-            slot = self.free.pop(0)
             req = self.queue.pop(0)
             one = lm.init_caches(self.cfg, 1, self.max_len)
             if req.prompt_embeds is not None:
@@ -89,9 +111,16 @@ class DecodeEngine:
             else:
                 logits, one = self._prefill(
                     self.params, jnp.asarray(req.prompt)[None, :], one)
-            self._scatter_slot(slot, one)
             tok = self._sample(np.asarray(logits)[0], req)
             req.output.append(int(tok))
+            if self._finished(req, tok):
+                # finished at admit (EOS or max_new_tokens=1): complete now,
+                # never occupy a slot or decode an extra token
+                req.done = True
+                continue
+            slot = self.free.pop(0)
+            self.caches = self._scatter(self.caches, one,
+                                        jnp.int32(slot))
             self.tokens = self.tokens.at[slot].set(int(tok))
             self.active[slot] = req
 
@@ -118,8 +147,7 @@ class DecodeEngine:
             tok = self._sample(logits[slot], req)
             req.output.append(tok)
             new_tokens[slot] = tok
-            if (len(req.output) >= req.max_new_tokens
-                    or (req.eos_id is not None and tok == req.eos_id)):
+            if self._finished(req, tok):
                 req.done = True
                 del self.active[slot]
                 self.free.append(slot)
