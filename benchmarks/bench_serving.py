@@ -1,9 +1,17 @@
-"""Beyond-paper benchmark: end-to-end serving engine throughput (CPU, reduced
-configs) — exercises the persistent-state slot machinery the paper's §VIII
-names as future work (batched multi-layer serving)."""
-from __future__ import annotations
+"""Serving-engine decode-block sweep: measure the host-sync overhead.
 
-import time
+The engine fuses ``decode_block`` (k) decode+sample steps per tick into
+one on-device ``lax.scan`` and syncs with the host once per block
+(``lm.decode_steps``).  This benchmark sweeps k in {1, 4, 16} on the
+reduced CPU configs and reports decode-only µs/token, so the per-token
+host round-trip cost the device-resident loop removes is *measured*,
+not asserted — µs/token should improve monotonically with k.
+
+Each (arch, k) engine first serves a warm-up request so jit compilation
+stays out of the measurement (``reset_metrics``).  Run with ``--quick``
+for the CI smoke configuration (one arch, k in {1, 4}).
+"""
+from __future__ import annotations
 
 import jax
 import numpy as np
@@ -14,22 +22,40 @@ from repro.models import lm
 from repro.serving.engine import DecodeEngine, Request
 
 
-def run():
-    for arch in ("qwen3-next-gdn", "mamba2-1.3b"):
+def _serve(eng, n_req: int, max_new: int):
+    reqs = [Request(rid=i, prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=max_new) for i in range(n_req)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+
+
+def run(quick: bool = False):
+    archs = ("qwen3-next-gdn",) if quick else ("qwen3-next-gdn",
+                                               "mamba2-1.3b")
+    blocks = (1, 4) if quick else (1, 4, 16)
+    max_new = 9 if quick else 17         # 1 admit token + k*ticks decode
+    for arch in archs:
         cfg = configs.get_arch(arch).reduced()
         params = lm.init_lm(jax.random.PRNGKey(0), cfg)
-        eng = DecodeEngine(cfg, params, max_slots=4, max_len=64)
-        reqs = [Request(rid=i, prompt=np.arange(1, 9, dtype=np.int32),
-                        max_new_tokens=8) for i in range(8)]
-        for r in reqs:
-            eng.submit(r)
-        t0 = time.perf_counter()
-        done = eng.run_until_done()
-        dt = time.perf_counter() - t0
-        toks = sum(len(r.output) for r in done)
-        emit(f"serving/{arch}", dt / max(toks, 1) * 1e6,
-             f"tokens={toks};ticks={eng.ticks};slots=4;reduced_cpu")
+        for k in blocks:
+            eng = DecodeEngine(cfg, params, max_slots=4, max_len=64,
+                               decode_block=k)
+            _serve(eng, 2, k + 1)        # warm-up: compile prefill + scan
+            eng.reset_metrics()
+            _serve(eng, 8, max_new)
+            m = eng.metrics()
+            emit(f"serving/{arch}/k{k}", m["decode_us_per_token"],
+                 f"decode_block={k};decoded_tokens={m['decoded_tokens']};"
+                 f"ticks={m['ticks']};mean_ttft_ms="
+                 f"{m['mean_ttft_s'] * 1e3:.1f};slots=4;reduced_cpu")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke config: one arch, k in {1, 4}")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -1,9 +1,13 @@
-"""End-to-end serving example: continuous batching with persistent state.
+"""End-to-end serving example: continuous batching with persistent state
+and a device-resident decode hot loop.
 
 Eight requests stream through four decode slots of a hybrid GDN model.
 Each layer's recurrent state lives in donated device buffers (the TPU
 analogue of the paper's BRAM-resident state) and is updated in place by
-the fused decode step every tick.
+the fused decode step every tick.  Sampling (greedy and temperature /
+top-k / top-p, per-slot) and the EOS / budget finished-flags also run on
+device, and each tick fuses ``decode_block`` decode+sample steps into one
+``lax.scan`` — the host syncs once per 4 tokens here, not once per token.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -20,28 +24,37 @@ from repro.serving.engine import DecodeEngine, Request
 def main():
     cfg = configs.get_arch("qwen3-next-gdn").reduced()
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
-    engine = DecodeEngine(cfg, params, max_slots=4, max_len=96)
+    engine = DecodeEngine(cfg, params, max_slots=4, max_len=96,
+                          decode_block=4)
 
     rng = np.random.default_rng(7)
     requests = []
     for i in range(8):
         prompt = rng.integers(1, cfg.vocab, size=6 + i, dtype=np.int32)
         req = Request(rid=i, prompt=prompt, max_new_tokens=6 + (i % 3),
-                      temperature=0.7 if i % 2 else 0.0)
+                      temperature=0.7 if i % 2 else 0.0,
+                      top_k=20 if i % 4 == 1 else 0,
+                      top_p=0.9 if i % 4 == 3 else 1.0)
         requests.append(req)
         engine.submit(req)
 
     t0 = time.perf_counter()
-    done = engine.run_until_done()
+    engine.run_until_done()
     dt = time.perf_counter() - t0
 
-    total = sum(len(r.output) for r in done)
-    print(f"{len(done)} requests / {total} tokens in {dt:.2f}s "
-          f"({engine.ticks} batched ticks; continuous batching reused "
+    m = engine.metrics()
+    print(f"{m['requests']} requests / {m['tokens']} tokens in {dt:.2f}s "
+          f"({m['ticks']} batched ticks x {engine.decode_block}-token "
+          f"blocks; continuous batching reused "
           f"{len(requests) - engine.max_slots} slots)")
+    print(f"decode hot loop: {m['decode_us_per_token']:.0f} us/token, "
+          f"mean ttft {m['mean_ttft_s'] * 1e3:.0f} ms, "
+          f"mean latency {m['mean_latency_s'] * 1e3:.0f} ms")
     for r in requests:
-        print(f"  req {r.rid} ({'greedy' if r.temperature == 0 else 'T=0.7'})"
-              f": {r.output}")
+        how = ("greedy" if r.temperature == 0 else
+               f"T={r.temperature}" + (f",k={r.top_k}" if r.top_k else "")
+               + (f",p={r.top_p}" if r.top_p < 1 else ""))
+        print(f"  req {r.rid} ({how}): {r.output}")
     assert all(r.done for r in requests)
 
 

@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Fail CI on broken intra-repo markdown links.
+
+Scans README.md and docs/**/*.md for ``[text](target)`` links, resolves
+relative targets against the file that contains them, and exits non-zero
+listing every target that does not exist.  External links (scheme://),
+mailto: and pure-fragment (#anchor) links are ignored; fenced code blocks
+are stripped before scanning so code samples can't false-positive.
+
+    python scripts/check_links.py [files...]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+?)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+
+
+def _targets(text: str):
+    for m in LINK_RE.finditer(FENCE_RE.sub("", text)):
+        t = m.group(1)
+        if "://" in t or t.startswith(("mailto:", "#")):
+            continue
+        yield t.split("#", 1)[0]
+
+
+def check(paths) -> int:
+    broken = []
+    for md in paths:
+        if not md.is_file():
+            broken.append(f"{md}: input file does not exist")
+            continue
+        for target in _targets(md.read_text(encoding="utf-8")):
+            if not (md.parent / target).exists():
+                broken.append(f"{md}: {target}")
+    for b in broken:
+        print(f"BROKEN LINK  {b}")
+    print(f"checked {len(paths)} files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    if len(sys.argv) > 1:
+        paths = [pathlib.Path(p) for p in sys.argv[1:]]
+    else:
+        # the docs suite is pinned: a deleted/renamed doc fails the job
+        # rather than silently shrinking the scan
+        pinned = [root / "README.md", root / "docs" / "paper_map.md",
+                  root / "docs" / "serving.md"]
+        paths = list(dict.fromkeys(
+            pinned + sorted((root / "docs").glob("**/*.md"))))
+    return check(paths)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

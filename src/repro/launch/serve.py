@@ -1,7 +1,12 @@
 """Serving launcher: continuous-batching decode with persistent state slots.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
-        --requests 8 --max-new 16
+        --requests 8 --max-new 16 --decode-block 4 --temperature 0.8 \
+        --top-k 40 --top-p 0.95
+
+``--decode-block k`` fuses k decode+sample steps per engine tick on device
+(one host sync per k tokens); sampling runs on device with per-slot
+temperature / top-k / top-p.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -23,7 +28,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--decode-block", type=int, default=4,
+                    help="decode+sample steps fused per engine tick "
+                         "(host syncs once per block)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="device top-k sampling (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="device nucleus sampling (1.0 = disabled)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
@@ -34,27 +46,38 @@ def main():
         cfg = cfg.reduced()
     params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
     engine = DecodeEngine(cfg, params, max_slots=args.slots,
-                          max_len=args.max_len, seed=args.seed)
+                          max_len=args.max_len, seed=args.seed,
+                          decode_block=args.decode_block)
     # per-slot budgets straight from the mixers' declarative cache specs
     print(f"engine: {args.slots} slots x "
           f"(persistent state {engine.state_bytes_per_slot / 2**10:.1f} KiB"
           f" + window/KV {engine.window_bytes_per_slot / 2**10:.1f} KiB)"
-          f" = {engine.cache_bytes / 2**20:.2f} MiB slot buffers")
+          f" = {engine.cache_bytes / 2**20:.2f} MiB slot buffers, "
+          f"decode_block={args.decode_block}")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 17),
                               dtype=np.int32)
         engine.submit(Request(rid=i, prompt=prompt,
                               max_new_tokens=args.max_new,
-                              temperature=args.temperature))
+                              temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p))
     t0 = time.perf_counter()
     done = engine.run_until_done()
     dt = time.perf_counter() - t0
-    total = sum(len(r.output) for r in done)
-    print(f"served {len(done)} requests, {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s) over {engine.ticks} engine ticks")
+    m = engine.metrics()
+    print(f"served {m['requests']} requests, {m['tokens']} tokens in "
+          f"{dt:.2f}s ({m['tokens'] / dt:.1f} tok/s) over "
+          f"{m['ticks']} engine ticks")
+    print(f"  decode: {m['decode_us_per_token']:.0f} us/token "
+          f"({m['decoded_tokens']} tokens in {m['decode_s']:.2f}s, "
+          f"one host sync per {args.decode_block} tokens)")
+    print(f"  per-request means: ttft {m['mean_ttft_s'] * 1e3:.1f} ms, "
+          f"latency {m['mean_latency_s'] * 1e3:.1f} ms, "
+          f"{m['mean_tokens_per_s']:.1f} tok/s")
     for r in done[:4]:
-        print(f"  req {r.rid}: {list(r.output)}")
+        print(f"  req {r.rid}: ttft {r.ttft_s * 1e3:.1f} ms, "
+              f"{len(r.output)} toks: {list(r.output)}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,9 @@ Entry points:
   init_caches(cfg, batch, max_len)          -> decode caches (per group, stacked)
   prefill(params, cfg, tokens|embeds, caches)-> (last-token logits, caches)
   decode_step(params, cfg, token, caches)   -> (logits, caches)
+  decode_steps(params, cfg, tokens, caches, k, sampler, sample_fn)
+                                            -> k fused decode+sample steps
+                                               (one host sync per k tokens)
 
 VLM / audio archs: the modality frontend is a stub per the assignment —
 ``embeds`` (precomputed patch/frame embeddings, (B, T, d_model)) are fed
@@ -274,3 +277,51 @@ def decode_step(params, cfg: ArchConfig, tokens_t, caches, dp_axes=None):
                             dp_axes=dp_axes)
     x = layers.rmsnorm_fwd(params["final_norm"], x, cfg.norm_eps)
     return _logits(params, cfg, x), caches
+
+
+def _greedy_sample(sampler, logits):
+    """Default on-device sampler: argmax, state untouched (never done)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), sampler
+
+
+def decode_steps(params, cfg: ArchConfig, tokens, caches, k: int,
+                 sampler=None, sample_fn=None, dp_axes=None):
+    """``k`` fused decode+sample steps in one ``lax.scan``.
+
+    This is the device-resident decode hot loop: the recurrent state,
+    the sampled tokens and the finished flags all stay on device for
+    ``k`` consecutive tokens, so a caller (the serving engine) syncs
+    with the host once per ``k`` tokens instead of once per token —
+    the serving-layer analogue of the paper's keep-state-resident
+    argument, and the building block for speculative / multi-device
+    decode.
+
+    ``sampler`` is any pytree carrying a ``"done"`` (B,) bool leaf;
+    ``sample_fn(sampler, logits) -> ((B,) int32 tokens, sampler)``
+    draws the next token batch and advances the done flags (see
+    ``repro.serving.sampling.sample``).  Omitting both gives greedy
+    argmax with no termination.  Slots whose ``done`` flag is set
+    before a step are masked: they re-feed their last token (their
+    slot cache advances with garbage, which is fine — admit rewrites
+    the whole slot) and that step is marked invalid for them.
+
+    Returns ``(toks (k, B) int32, valid (k, B) bool, tokens (B,),
+    caches, sampler)`` — ``toks[j]`` is the token batch from step j,
+    ``valid[j]`` whether each slot was still live going into step j.
+    """
+    if sample_fn is None:
+        sample_fn = _greedy_sample
+    if sampler is None:
+        sampler = {"done": jnp.zeros(tokens.shape, bool)}
+
+    def step(carry, _):
+        toks, cs, st = carry
+        live = ~st["done"]
+        logits, cs = decode_step(params, cfg, toks, cs, dp_axes=dp_axes)
+        nxt, st = sample_fn(st, logits)
+        nxt = jnp.where(live, nxt, toks)
+        return (nxt, cs, st), (nxt, live)
+
+    (tokens, caches, sampler), (toks, valid) = jax.lax.scan(
+        step, (tokens, caches, sampler), None, length=k)
+    return toks, valid, tokens, caches, sampler

@@ -1,0 +1,192 @@
+"""On-device batched sampling for the decode engine.
+
+The paper's argument is that decode latency is set by how often state
+crosses a memory boundary.  Sampling on the host re-introduces exactly
+that boundary at the serving layer: logits leave the device, a Python
+loop picks a token, and the token is shipped back — one full round-trip
+per token.  This module keeps the whole sample-and-check step on device
+so the engine can fuse ``k`` decode+sample steps into one ``lax.scan``
+(see ``lm.decode_steps``) and sync with the host once per ``k`` tokens.
+
+Sampler state is a pytree of per-slot arrays (one row per decode slot),
+living in donated device buffers next to the recurrent-state slot
+buffers:
+
+  key         (S, 2) uint32   per-slot PRNG key (folded from the request
+                              id, so a request's draws are independent of
+                              which slot it lands in and of ``k``)
+  temperature (S,)   float32  0 => greedy (argmax of raw logits)
+  top_k       (S,)   int32    0 => disabled
+  top_p       (S,)   float32  1.0 => disabled
+  eos_id      (S,)   int32    -1 => no EOS
+  remaining   (S,)   int32    token budget left (max_new_tokens minus
+                              tokens already emitted)
+  done        (S,)   bool     device-side finished flag (EOS or budget)
+
+``sample`` consumes a (S, V) logits batch and advances the state; the
+filtering pipeline is: log-softmax -> temperature scale -> top-k mask ->
+top-p (nucleus) mask -> Gumbel-max draw.  ``filter_logits_np`` /
+``sample_np`` are the NumPy mirror of the same pipeline, used by the
+engine's admit-time (prefill) sampling on the host and by the tests as
+the reference implementation.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SamplerState = Dict[str, jax.Array]
+
+_NEG_INF = float("-inf")
+_MIN_TEMP = 1e-6
+
+
+# --------------------------------------------------------------- state
+
+def init_state(max_slots: int) -> SamplerState:
+    """All slots start done (free); ``admit_slot`` activates them."""
+    return {
+        "key": jnp.zeros((max_slots, 2), jnp.uint32),
+        "temperature": jnp.zeros((max_slots,), jnp.float32),
+        "top_k": jnp.zeros((max_slots,), jnp.int32),
+        "top_p": jnp.ones((max_slots,), jnp.float32),
+        "eos_id": jnp.full((max_slots,), -1, jnp.int32),
+        "remaining": jnp.zeros((max_slots,), jnp.int32),
+        "done": jnp.ones((max_slots,), bool),
+    }
+
+
+def admit_slot(state: SamplerState, slot: int, *, seed: int, rid: int,
+               temperature: float, top_k: int, top_p: float,
+               eos_id, budget: int) -> SamplerState:
+    """Write one request's sampling parameters into slot ``slot``.
+
+    The slot key is folded from (engine seed, request id), so the
+    request's draw sequence depends only on how many tokens it has
+    decoded — not on slot placement, co-resident requests, or the
+    engine's ``decode_block``."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+    return {
+        "key": state["key"].at[slot].set(key.astype(jnp.uint32)),
+        "temperature": state["temperature"].at[slot].set(
+            jnp.float32(temperature)),
+        "top_k": state["top_k"].at[slot].set(jnp.int32(top_k)),
+        "top_p": state["top_p"].at[slot].set(jnp.float32(top_p)),
+        "eos_id": state["eos_id"].at[slot].set(
+            jnp.int32(-1 if eos_id is None else eos_id)),
+        "remaining": state["remaining"].at[slot].set(jnp.int32(budget)),
+        "done": state["done"].at[slot].set(False),
+    }
+
+
+# ------------------------------------------------------------- filtering
+
+def _filter_row(logits, temperature, top_k, top_p):
+    """One row of the filtering pipeline; returns scaled log-probs with
+    excluded tokens at -inf.  Tokens tied with the top-k/top-p cutoff
+    value are kept (same rule as the NumPy reference).  Both cutoffs are
+    derived from a single full-vocab sort: top-k masks exactly the tail
+    of the descending order, and softmax is monotone, so the nucleus
+    boundary maps back to a threshold in scaled-log-prob space."""
+    v = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits)
+    scaled = logp / jnp.maximum(temperature, _MIN_TEMP)
+    desc = jnp.sort(scaled)[::-1]
+    # top-k: keep the k largest (log_softmax is monotonic, so ranking by
+    # `scaled` equals ranking by raw logits)
+    kth = desc[jnp.clip(top_k - 1, 0, v - 1)]
+    desc = jnp.where((top_k > 0) & (desc < kth), _NEG_INF, desc)
+    keep = (top_k <= 0) | (scaled >= kth)
+    # top-p (nucleus) on the renormalized post-top-k distribution: keep
+    # the smallest prefix of descending probs whose mass reaches top_p
+    p_desc = jax.nn.softmax(desc)
+    exclusive = jnp.cumsum(p_desc) - p_desc
+    cutoff = jnp.min(jnp.where(exclusive < top_p, desc, jnp.inf))
+    keep &= (top_p >= 1.0) | (scaled >= cutoff)
+    return jnp.where(keep, scaled, _NEG_INF)
+
+
+def filter_logits(logits, temperature, top_k, top_p):
+    """Batched filtering: (S, V) logits + per-slot parameter arrays ->
+    (S, V) scaled log-probs, excluded tokens at -inf."""
+    return jax.vmap(_filter_row)(logits.astype(jnp.float32),
+                                 temperature, top_k, top_p)
+
+
+# -------------------------------------------------------------- sampling
+
+def sample(state: SamplerState, logits):
+    """One on-device sampling step over all slots + done-flag advance.
+
+    logits: (S, V).  Returns (tokens (S,) int32, new state).  Greedy
+    slots (temperature <= 0) take argmax of the raw logits; stochastic
+    slots draw via Gumbel-max over the filtered log-probs.  ``remaining``
+    only decrements for slots that were live this step, and ``done`` is
+    sticky, so finished slots are frozen until re-admitted."""
+    logits = logits.astype(jnp.float32)
+    split = jax.vmap(jax.random.split)(state["key"])      # (S, 2, 2)
+    new_key, sub = split[:, 0], split[:, 1]
+    greedy = jnp.argmax(logits, axis=-1)
+
+    def _stochastic():
+        filtered = filter_logits(logits, state["temperature"],
+                                 state["top_k"], state["top_p"])
+        gumbel = jax.vmap(lambda k, shape=logits.shape[-1:]:
+                          jax.random.gumbel(k, shape))(sub)
+        drawn = jnp.argmax(filtered + gumbel, axis=-1)
+        return jnp.where(state["temperature"] > 0.0, drawn, greedy)
+
+    # ticks with no live stochastic slot skip the filter/sort/draw
+    # pipeline entirely (done/free slots keep stale parameters); the key
+    # split above is unconditional, so each slot's stream position stays
+    # a function of its step count alone
+    tok = jax.lax.cond(
+        jnp.any((state["temperature"] > 0.0) & ~state["done"]),
+        _stochastic, lambda: greedy)
+    tok = tok.astype(jnp.int32)
+
+    active = ~state["done"]
+    remaining = state["remaining"] - active.astype(jnp.int32)
+    hit_eos = (state["eos_id"] >= 0) & (tok == state["eos_id"])
+    done = state["done"] | (active & (hit_eos | (remaining <= 0)))
+    return tok, {**state, "key": new_key.astype(jnp.uint32),
+                 "remaining": remaining, "done": done}
+
+
+# -------------------------------------------- NumPy mirror (host + tests)
+
+def filter_logits_np(logits: np.ndarray, temperature: float, top_k: int,
+                     top_p: float) -> np.ndarray:
+    """Reference pipeline for one (V,) row — identical cutoff rules to
+    ``_filter_row`` (ties with the cutoff value are kept)."""
+    logits = np.asarray(logits, np.float64)
+    logp = logits - np.logaddexp.reduce(logits)           # log-softmax guard
+    scaled = logp / max(temperature, _MIN_TEMP)
+    if top_k > 0:
+        kth = np.sort(scaled)[::-1][min(top_k, logits.size) - 1]
+        scaled = np.where(scaled < kth, _NEG_INF, scaled)
+    if top_p < 1.0:
+        probs = np.exp(scaled - np.logaddexp.reduce(
+            scaled[np.isfinite(scaled)]))
+        desc = np.sort(probs)[::-1]
+        exclusive = np.cumsum(desc) - desc
+        cutoff = np.min(desc[exclusive < top_p])
+        scaled = np.where(probs < cutoff, _NEG_INF, scaled)
+    return scaled
+
+
+def sample_np(rng: np.random.Generator, logits: np.ndarray, *,
+              temperature: float, top_k: int = 0,
+              top_p: float = 1.0) -> int:
+    """Host-side draw matching the device pipeline's distribution (used
+    for the admit-time token, whose logits come from prefill)."""
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    scaled = filter_logits_np(logits, temperature, top_k, top_p)
+    keep = np.isfinite(scaled)
+    p = np.zeros_like(scaled)
+    p[keep] = np.exp(scaled[keep] - np.logaddexp.reduce(scaled[keep]))
+    return int(rng.choice(p.size, p=p / p.sum()))

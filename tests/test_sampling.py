@@ -1,0 +1,155 @@
+"""Device sampler vs NumPy reference: filtering pipeline parity,
+greedy/argmax equivalence, done-flag semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import sampling
+
+
+def _rand_logits(rng, s=5, v=64):
+    # continuous values: cutoff ties have measure zero
+    return rng.normal(size=(s, v)).astype(np.float32) * 3.0
+
+
+@pytest.mark.parametrize("temperature,top_k,top_p", [
+    (1.0, 0, 1.0),          # plain temperature
+    (0.7, 8, 1.0),          # top-k only
+    (1.3, 0, 0.9),          # top-p only
+    (0.9, 12, 0.8),         # both
+    (2.0, 1, 1.0),          # top-k=1 degenerates to argmax support
+])
+def test_filter_matches_numpy_reference(temperature, top_k, top_p):
+    rng = np.random.default_rng(0)
+    logits = _rand_logits(rng)
+    s = logits.shape[0]
+    dev = np.asarray(sampling.filter_logits(
+        jnp.asarray(logits),
+        jnp.full((s,), temperature, jnp.float32),
+        jnp.full((s,), top_k, jnp.int32),
+        jnp.full((s,), top_p, jnp.float32)))
+    for row in range(s):
+        ref = sampling.filter_logits_np(logits[row], temperature, top_k,
+                                        top_p)
+        # identical support...
+        np.testing.assert_array_equal(np.isfinite(dev[row]),
+                                      np.isfinite(ref))
+        # ...and matching scaled log-probs on it
+        keep = np.isfinite(ref)
+        np.testing.assert_allclose(dev[row][keep], ref[keep], rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_top_k_support_size():
+    rng = np.random.default_rng(1)
+    logits = _rand_logits(rng)
+    for k in (1, 4, 16):
+        out = np.asarray(sampling.filter_logits(
+            jnp.asarray(logits),
+            jnp.ones((5,), jnp.float32),
+            jnp.full((5,), k, jnp.int32),
+            jnp.ones((5,), jnp.float32)))
+        assert (np.isfinite(out).sum(-1) == k).all()
+
+
+def test_top_p_keeps_minimal_prefix():
+    rng = np.random.default_rng(2)
+    logits = _rand_logits(rng, s=1)[0]
+    p = 0.8
+    ref = sampling.filter_logits_np(logits, 1.0, 0, p)
+    keep = np.isfinite(ref)
+    probs = np.exp(logits - np.logaddexp.reduce(logits.astype(np.float64)))
+    kept = np.sort(probs[keep])[::-1]
+    assert kept.sum() >= p                      # mass reaches the nucleus
+    assert kept.sum() - kept[-1] < p            # and is minimal
+
+
+def test_temperature_zero_is_argmax():
+    rng = np.random.default_rng(3)
+    logits = _rand_logits(rng)
+    st = sampling.init_state(5)
+    st["done"] = jnp.zeros((5,), bool)
+    st["remaining"] = jnp.full((5,), 10, jnp.int32)
+    tok, _ = sampling.sample(st, jnp.asarray(logits))
+    np.testing.assert_array_equal(np.asarray(tok), logits.argmax(-1))
+    assert sampling.sample_np(np.random.default_rng(0), logits[0],
+                              temperature=0.0) == int(logits[0].argmax())
+
+
+def test_sampled_tokens_stay_in_filtered_support():
+    rng = np.random.default_rng(4)
+    logits = _rand_logits(rng)
+    st = sampling.init_state(5)
+    st["done"] = jnp.zeros((5,), bool)
+    st["remaining"] = jnp.full((5,), 100, jnp.int32)
+    st["temperature"] = jnp.full((5,), 0.9, jnp.float32)
+    st["top_k"] = jnp.full((5,), 5, jnp.int32)
+    st["top_p"] = jnp.full((5,), 0.95, jnp.float32)
+    support = np.isfinite(np.asarray(sampling.filter_logits(
+        jnp.asarray(logits), st["temperature"], st["top_k"], st["top_p"])))
+    seen = set()
+    for _ in range(20):
+        tok, st = sampling.sample(st, jnp.asarray(logits))
+        for row, t in enumerate(np.asarray(tok)):
+            assert support[row, t]
+            seen.add((row, int(t)))
+    assert len(seen) > 5        # actually stochastic, not argmax-stuck
+
+
+def test_done_flags_eos_and_budget():
+    v = 16
+    logits = np.full((3, v), -5.0, np.float32)
+    logits[:, 7] = 5.0                       # greedy token = 7 everywhere
+    st = sampling.init_state(3)
+    st["done"] = jnp.asarray([False, False, True])
+    st["remaining"] = jnp.asarray([5, 1, 5], jnp.int32)
+    st["eos_id"] = jnp.asarray([7, -1, -1], jnp.int32)
+    tok, st2 = sampling.sample(st, jnp.asarray(logits))
+    done = np.asarray(st2["done"])
+    assert done[0]                           # hit its EOS
+    assert done[1]                           # budget exhausted
+    assert done[2]                           # sticky
+    # done slot's budget is frozen
+    assert int(st2["remaining"][2]) == 5
+    # admit re-arms a slot
+    st3 = sampling.admit_slot(st2, 2, seed=0, rid=9, temperature=0.0,
+                              top_k=0, top_p=1.0, eos_id=None, budget=4)
+    assert not bool(st3["done"][2])
+    assert int(st3["remaining"][2]) == 4
+
+
+def test_engine_rejects_out_of_range_params():
+    from repro.serving.engine import DecodeEngine, Request
+    eng = object.__new__(DecodeEngine)      # submit() needs no jit state
+    eng.queue, eng._all = [], []
+    with pytest.raises(ValueError, match="top_p"):
+        DecodeEngine.submit(eng, Request(rid=0, top_p=0.0))
+    with pytest.raises(ValueError, match="top_k"):
+        DecodeEngine.submit(eng, Request(rid=0, top_k=-1))
+    with pytest.raises(ValueError, match="temperature"):
+        # top-k/top-p on a greedy request would silently no-op
+        DecodeEngine.submit(eng, Request(rid=0, top_k=40))
+    with pytest.raises(ValueError, match="temperature"):
+        DecodeEngine.submit(eng, Request(rid=0, top_p=0.9))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        DecodeEngine.submit(eng, Request(rid=0, max_new_tokens=0))
+
+
+def test_per_request_key_is_placement_independent():
+    """A request's draw sequence depends on (seed, rid) only — not the
+    slot it lands in."""
+    rng = np.random.default_rng(5)
+    logits = jnp.tile(jnp.asarray(_rand_logits(rng, s=1)), (4, 1))
+
+    def draws(slot):
+        st = sampling.init_state(4)
+        st = sampling.admit_slot(st, slot, seed=0, rid=42, temperature=1.0,
+                                 top_k=0, top_p=1.0, eos_id=None, budget=100)
+        out = []
+        for _ in range(8):
+            tok, st = sampling.sample(st, logits)
+            out.append(int(tok[slot]))
+        return out
+
+    assert draws(0) == draws(3)
