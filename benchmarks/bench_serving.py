@@ -1,15 +1,28 @@
-"""Serving-engine decode-block sweep: measure the host-sync overhead.
+"""Serving-engine benchmarks: host-sync overhead and TTFT under load.
 
-The engine fuses ``decode_block`` (k) decode+sample steps per tick into
-one on-device ``lax.scan`` and syncs with the host once per block
-(``lm.decode_steps``).  This benchmark sweeps k in {1, 4, 16} on the
-reduced CPU configs and reports decode-only µs/token, so the per-token
-host round-trip cost the device-resident loop removes is *measured*,
-not asserted — µs/token should improve monotonically with k.
+Two measurements, both on the reduced CPU configs (absolute numbers are
+CPU-interpreter scale; only the trend is the claim):
 
-Each (arch, k) engine first serves a warm-up request so jit compilation
-stays out of the measurement (``reset_metrics``).  Run with ``--quick``
-for the CI smoke configuration (one arch, k in {1, 4}).
+1. **decode-block sweep** — the engine fuses ``decode_block`` (k)
+   decode+sample steps per tick into one on-device ``lax.scan`` and syncs
+   with the host once per block (``lm.decode_steps``).  Sweeping k in
+   {1, 4, 16} measures the per-token host round-trip cost the
+   device-resident loop removes: µs/token should improve monotonically
+   with k.
+
+2. **TTFT under load** — requests are queued while every decode slot is
+   busy with a long-budget request.  With ``overlap=False`` (the
+   serialized baseline) a queued prompt prefills only after a slot frees,
+   on the tick thread; with ``overlap=True`` it streams chunk-by-chunk
+   into the staging buffer between decode ticks and emits its first token
+   (fused on-device sample) *before* any slot frees.  The benchmark
+   reports mean TTFT of the queued requests for both modes, asserts the
+   overlapped mean is strictly better, and asserts the token streams are
+   bitwise identical (overlap moves timing, never sampling).
+
+Each engine first serves a warm-up pass so jit compilation stays out of
+the measurement (``reset_metrics``).  Run with ``--quick`` for the CI
+smoke configuration (one arch, k in {1, 4}, plus the TTFT comparison).
 """
 from __future__ import annotations
 
@@ -31,7 +44,7 @@ def _serve(eng, n_req: int, max_new: int):
     assert all(r.done for r in reqs)
 
 
-def run(quick: bool = False):
+def run_block_sweep(quick: bool = False):
     archs = ("qwen3-next-gdn",) if quick else ("qwen3-next-gdn",
                                                "mamba2-1.3b")
     blocks = (1, 4) if quick else (1, 4, 16)
@@ -52,10 +65,84 @@ def run(quick: bool = False):
                  f"{m['mean_ttft_s'] * 1e3:.1f};slots=4;reduced_cpu")
 
 
+def _ttft_load(cfg, params, *, overlap: bool, n_queued: int,
+               trials: int):
+    """Queued-admits-while-slots-decode scenario.
+
+    Two long-budget requests (staggered completions) occupy both slots;
+    the measured requests then queue behind them.  Serialized admit can
+    only prefill a queued prompt once a slot frees; overlapped admit
+    prefills it ahead of any free slot and emits its first token while
+    both slots are still mid-decode.  Returns (median-of-``trials`` mean
+    TTFT of the queued requests, token streams of the last trial) — the
+    median keeps a single noisy CI run from polluting the comparison.
+    """
+    prompt = np.arange(1, 34, dtype=np.int32)            # 33 tokens
+    eng = DecodeEngine(cfg, params, max_slots=2, max_len=128,
+                       decode_block=4, overlap=overlap, prefill_chunk=8)
+    # warm-up compiles every program the measured phase uses: the chunk
+    # plan for this prompt length, the k tick buckets, admit and scatter —
+    # and runs a queued request through the staging path
+    for i in range(3):
+        eng.submit(Request(rid=10_000 + i, prompt=prompt,
+                           max_new_tokens=9))
+    eng.run_until_done()
+    means = []
+    for trial in range(trials):
+        eng.reset_metrics()
+        base = 1000 * trial
+        load = [Request(rid=base + 100 + i, prompt=prompt,
+                        max_new_tokens=48 + 20 * i) for i in range(2)]
+        for r in load:
+            eng.submit(r)
+        eng.step()              # admit the load before the queued arrivals
+        queued = [Request(rid=base + i, prompt=prompt, max_new_tokens=13)
+                  for i in range(n_queued)]
+        for r in queued:
+            eng.submit(r)
+        eng.run_until_done()
+        assert all(r.done for r in load + queued)
+        means.append(float(np.mean([r.ttft_s for r in queued])))
+        streams = [list(r.output) for r in load + queued]
+    return float(np.median(means)), streams
+
+
+def run_ttft_under_load(quick: bool = False):
+    arch = "qwen3-next-gdn"
+    n_queued = 2
+    trials = 3 if quick else 5
+    cfg = configs.get_arch(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    serialized, s_streams = _ttft_load(cfg, params, overlap=False,
+                                       n_queued=n_queued, trials=trials)
+    overlapped, o_streams = _ttft_load(cfg, params, overlap=True,
+                                       n_queued=n_queued, trials=trials)
+    assert o_streams == s_streams, \
+        "overlap must move timing only — token streams diverged"
+    for mode, ttft in (("serialized", serialized),
+                       ("overlapped", overlapped)):
+        emit(f"serving/{arch}/ttft_load_{mode}", ttft * 1e6,
+             f"mean_ttft_ms={ttft * 1e3:.1f};queued={n_queued};"
+             f"trials={trials};slots=2;decode_block=4;prefill_chunk=8;"
+             f"reduced_cpu")
+    speedup = serialized / max(overlapped, 1e-12)
+    emit(f"serving/{arch}/ttft_load_speedup", speedup,
+         f"serialized_over_overlapped;bitwise_identical_streams")
+    assert overlapped < serialized, (
+        f"overlapped admit must beat the serialized baseline under load: "
+        f"{overlapped * 1e3:.1f} ms >= {serialized * 1e3:.1f} ms")
+
+
+def run(quick: bool = False):
+    run_block_sweep(quick=quick)
+    run_ttft_under_load(quick=quick)
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke config: one arch, k in {1, 4}")
+                    help="CI smoke config: one arch, k in {1, 4}, plus the "
+                         "overlap-on/off TTFT-under-load comparison")
     args = ap.parse_args()
     run(quick=args.quick)

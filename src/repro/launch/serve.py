@@ -6,7 +6,12 @@
 
 ``--decode-block k`` fuses k decode+sample steps per engine tick on device
 (one host sync per k tokens); sampling runs on device with per-slot
-temperature / top-k / top-p.  See docs/serving.md.
+temperature / top-k / top-p.  Prefill is chunked (``--prefill-chunk``) and
+by default overlapped: queued requests stream into the staging buffers at
+tick boundaries while resident slots decode, with the first token sampled
+on device by the fused admit head (``--serialized`` restores the
+prefill-behind-a-free-slot baseline; token streams are bitwise identical).
+See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -31,6 +36,16 @@ def main():
     ap.add_argument("--decode-block", type=int, default=4,
                     help="decode+sample steps fused per engine tick "
                          "(host syncs once per block)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt chunk size for staged prefill")
+    ap.add_argument("--serialized", dest="overlap", action="store_false",
+                    default=True,
+                    help="disable prefill/decode overlap (admit prefills "
+                         "behind a free slot, on the tick thread)")
+    ap.add_argument("--no-budget-ticks", dest="budget_ticks",
+                    action="store_false", default=True,
+                    help="always run full decode-block ticks (disable the "
+                         "budget-aware tick-length cap)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="device top-k sampling (0 = disabled)")
@@ -47,13 +62,18 @@ def main():
     params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
     engine = DecodeEngine(cfg, params, max_slots=args.slots,
                           max_len=args.max_len, seed=args.seed,
-                          decode_block=args.decode_block)
+                          decode_block=args.decode_block,
+                          overlap=args.overlap,
+                          prefill_chunk=args.prefill_chunk,
+                          budget_ticks=args.budget_ticks)
     # per-slot budgets straight from the mixers' declarative cache specs
     print(f"engine: {args.slots} slots x "
           f"(persistent state {engine.state_bytes_per_slot / 2**10:.1f} KiB"
           f" + window/KV {engine.window_bytes_per_slot / 2**10:.1f} KiB)"
           f" = {engine.cache_bytes / 2**20:.2f} MiB slot buffers, "
-          f"decode_block={args.decode_block}")
+          f"decode_block={args.decode_block}, "
+          f"prefill={'overlapped' if args.overlap else 'serialized'} "
+          f"chunks of {engine.prefill_chunk}")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 17),
@@ -71,7 +91,8 @@ def main():
           f"{m['ticks']} engine ticks")
     print(f"  decode: {m['decode_us_per_token']:.0f} us/token "
           f"({m['decoded_tokens']} tokens in {m['decode_s']:.2f}s, "
-          f"one host sync per {args.decode_block} tokens)")
+          f"one host sync per {args.decode_block} tokens, "
+          f"{m['stage_dispatches']} staged prefill dispatches)")
     print(f"  per-request means: ttft {m['mean_ttft_s'] * 1e3:.1f} ms, "
           f"latency {m['mean_latency_s'] * 1e3:.1f} ms, "
           f"{m['mean_tokens_per_s']:.1f} tok/s")

@@ -163,6 +163,80 @@ def attn_prefill(p, x, cache: KVCache, *, rope_theta=10000.0, window=None,
     return out, new_cache
 
 
+def attn_prefill_chunk(p, x, cache: KVCache, *, rope_theta=10000.0,
+                       window=None, head_mask=None):
+    """Process one prompt chunk *continuing from* the cache.
+
+    Unlike ``attn_prefill`` (which assumes a fresh cache and positions
+    starting at 0), this attends the chunk's queries against the cached KV
+    *and* the in-chunk causal prefix, with RoPE positions offset by
+    ``cache.length`` — the building block of the serving engine's chunked
+    prefill.  Exactly equivalent to decoding the chunk token by token:
+    a pre-chunk cache slot is visible to query at position ``pos`` iff it
+    is occupied and its token is among the ``size`` most recent at ``pos``
+    (the rolling buffer holds exactly those, so this matches what serial
+    `attn_decode_xla` calls would see).
+
+    x: (B, C, d_model) with C <= cache size (the rolling scatter writes
+    each chunk token to a distinct slot).  Returns (out (B, C, d), cache).
+    """
+    B, C, _ = x.shape
+    size = cache.k.shape[2]
+    if C > size:
+        raise ValueError(f"prefill chunk of {C} tokens exceeds the rolling "
+                         f"KV buffer ({size}); lower the chunk size")
+    pos = cache.length[:, None] + jnp.arange(C)[None, :]       # (B, C)
+    q, k, v = _qkv(p, x, pos, rope_theta)
+    Hq, hd = q.shape[2], q.shape[3]
+    Hkv = cache.k.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, C, Hkv, G, hd).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,C,hd)
+
+    # --- scores vs the pre-chunk cache -------------------------------
+    # slot t holds absolute position p_t = the largest p < length with
+    # p = t (mod size); it is visible to query i iff occupied and within
+    # the `size` most recent positions at pos_i (serial-decode rule).
+    t_idx = jnp.arange(size)
+    L = cache.length[:, None]                                  # (B, 1)
+    p_t = (L - 1) - jnp.mod(L - 1 - t_idx[None, :], size)      # (B, size)
+    occupied = t_idx[None, :] < L
+    vis = occupied[:, None, :] & (p_t[:, None, :]
+                                  > pos[:, :, None] - size)    # (B, C, size)
+    s_cache = scale * jnp.einsum("bhgcd,bhtd->bhgct", qg, cache.k,
+                                 preferred_element_type=jnp.float32)
+    s_cache = jnp.where(vis[:, None, None, :, :], s_cache, -1e30)
+
+    # --- in-chunk causal scores --------------------------------------
+    # with C <= size every in-chunk position is within the most-recent
+    # window of every later query, so the mask is plain causal
+    kc = k.transpose(0, 2, 1, 3)                               # (B,Hkv,C,hd)
+    vc = v.transpose(0, 2, 1, 3)
+    s_chunk = scale * jnp.einsum("bhgcd,bhjd->bhgcj", qg, kc,
+                                 preferred_element_type=jnp.float32)
+    causal = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]
+    s_chunk = jnp.where(causal[None, None, None, :, :], s_chunk, -1e30)
+
+    s = jnp.concatenate([s_cache, s_chunk], axis=-1)           # (B,Hkv,G,C,size+C)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    p_att = jnp.exp(s - pmax)
+    p_att = p_att / jnp.maximum(jnp.sum(p_att, -1, keepdims=True), 1e-30)
+    vals = jnp.concatenate([cache.v, vc.astype(cache.v.dtype)], axis=2)
+    o = jnp.einsum("bhgcs,bhsd->bhgcd", p_att.astype(vals.dtype), vals,
+                   preferred_element_type=jnp.float32)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, C, Hq, hd).astype(x.dtype)
+    o = _apply_head_mask(o, head_mask)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"]).astype(x.dtype)
+
+    # --- rolling insert of the chunk (distinct slots since C <= size) -
+    slots = jnp.mod(pos, size)                                 # (B, C)
+    new_k = jax.vmap(lambda ck, kk, sl: ck.at[:, sl, :].set(
+        kk.astype(ck.dtype)))(cache.k, kc, slots)
+    new_v = jax.vmap(lambda cv, vv, sl: cv.at[:, sl, :].set(
+        vv.astype(cv.dtype)))(cache.v, vc, slots)
+    return out, KVCache(new_k, new_v, cache.length + C)
+
+
 def _cache_insert(cache: KVCache, k_t, v_t):
     """Insert one token at the rolling position. k_t: (B, Hkv, hd)."""
     size = cache.k.shape[2]

@@ -20,6 +20,12 @@ Entry points:
   cache_specs(cfg, batch, max_len)          -> CacheSpec (declarative, stacked)
   init_caches(cfg, batch, max_len)          -> decode caches (per group, stacked)
   prefill(params, cfg, tokens|embeds, caches)-> (last-token logits, caches)
+  prefill_chunk(params, cfg, caches, ...)   -> one prompt chunk, resumed from
+                                               the caches (no logits)
+  prefill_chunk_scan(params, cfg, caches, ..)-> n equal chunks in one scan
+  prefill_sample(params, cfg, caches, sampler, sample_fn, ...)
+                                            -> final chunk + fused first-token
+                                               draw (on-device admit)
   decode_step(params, cfg, token, caches)   -> (logits, caches)
   decode_steps(params, cfg, tokens, caches, k, sampler, sample_fn)
                                             -> k fused decode+sample steps
@@ -244,6 +250,9 @@ def _run_cached(params, cfg: ArchConfig, x, caches, mode: str,
                 h = layers.rmsnorm_fwd(lp["norm1"], x, cfg.norm_eps)
                 if mode == "prefill":
                     mix, nc = mixer.prefill(lp["mixer"], cfg, h, c_slice[i])
+                elif mode == "chunk":
+                    mix, nc = mixer.prefill_chunk(lp["mixer"], cfg, h,
+                                                  c_slice[i])
                 else:
                     mix, nc = mixer.decode(lp["mixer"], cfg, h, c_slice[i])
                 x = x + mix
@@ -267,6 +276,66 @@ def prefill(params, cfg: ArchConfig, caches, tokens=None, embeds=None,
                             dp_axes=dp_axes)
     x = layers.rmsnorm_fwd(params["final_norm"], x[:, -1], cfg.norm_eps)
     return _logits(params, cfg, x), caches
+
+
+def prefill_chunk(params, cfg: ArchConfig, caches, tokens=None, embeds=None,
+                  dp_axes=None):
+    """Process one prompt chunk *continuing from* ``caches``.
+
+    Unlike ``prefill`` this never computes logits (interior chunks don't
+    need them — the lm head on every chunk would be pure waste) and every
+    mixer resumes from its cache state (attention continues RoPE/visibility
+    at the cached position via ``prefill_chunk``).  Returns (final hidden
+    (B, C, d), caches); feed the last chunk to ``prefill_sample`` for the
+    logits + fused first-token draw.
+    """
+    x = embeds if embeds is not None else layers.embed_fwd(params["embed"],
+                                                           tokens)
+    x = _constrain(x.astype(jnp.dtype(cfg.act_dtype)), dp_axes)
+    return _run_cached(params, cfg, x, caches, "chunk", dp_axes=dp_axes)
+
+
+def prefill_chunk_scan(params, cfg: ArchConfig, caches, tokens=None,
+                       embeds=None, dp_axes=None):
+    """``lax.scan`` of ``prefill_chunk`` over equal-size prompt chunks.
+
+    tokens: (B, n, C) int32 / embeds: (B, n, C, d) — n chunks of C tokens
+    each, processed in order with the caches threaded through the scan, so
+    one compiled program covers n chunks of prefill (the serving executor
+    compiles one such program per power-of-two n).  Returns caches.
+    """
+    xs = tokens if tokens is not None else embeds
+    xs = jnp.moveaxis(xs, 1, 0)                    # (n, B, C[, d])
+
+    def body(caches, chunk):
+        if tokens is not None:
+            _, caches = prefill_chunk(params, cfg, caches, tokens=chunk,
+                                      dp_axes=dp_axes)
+        else:
+            _, caches = prefill_chunk(params, cfg, caches, embeds=chunk,
+                                      dp_axes=dp_axes)
+        return caches, None
+
+    caches, _ = jax.lax.scan(body, caches, xs)
+    return caches
+
+
+def prefill_sample(params, cfg: ArchConfig, caches, sampler, sample_fn,
+                   tokens=None, embeds=None, dp_axes=None):
+    """Final prompt chunk with the fused admit head: one dispatch computes
+    the chunk, the last-token logits and the first sampled token, and
+    advances the sampler state (key split, budget decrement, EOS/budget
+    done flag) — no host ``sample_np`` draw on the admit hot path.
+
+    ``sampler``/``sample_fn`` as in ``decode_steps`` (the serving executor
+    passes a 1-row ``repro.serving.sampling`` state and its ``sample``).
+    Returns (token (B,), sampler, caches).
+    """
+    x, caches = prefill_chunk(params, cfg, caches, tokens=tokens,
+                              embeds=embeds, dp_axes=dp_axes)
+    h = layers.rmsnorm_fwd(params["final_norm"], x[:, -1], cfg.norm_eps)
+    tok, sampler = sample_fn(sampler, _logits(params, cfg, h))
+    return tok.astype(jnp.int32), sampler, caches
 
 
 def decode_step(params, cfg: ArchConfig, tokens_t, caches, dp_axes=None):

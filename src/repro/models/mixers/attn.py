@@ -46,6 +46,15 @@ class Attention(SequenceMixer):
                                       head_mask=_head_mask(cfg))
 
     @classmethod
+    def prefill_chunk(cls, params, cfg, x, cache):
+        # positions and visibility continue from cache.length (the base-class
+        # default would restart RoPE at 0 and drop the cached KV)
+        return attention.attn_prefill_chunk(params, x, cache,
+                                            rope_theta=cfg.rope_theta,
+                                            window=cls._window(cfg),
+                                            head_mask=_head_mask(cfg))
+
+    @classmethod
     def decode(cls, params, cfg, x_t, cache):
         return attention.attn_decode_xla(params, x_t, cache,
                                          rope_theta=cfg.rope_theta,

@@ -128,6 +128,20 @@ class SequenceMixer:
         raise NotImplementedError(cls.kind)
 
     @classmethod
+    def prefill_chunk(cls, params, cfg, x, cache):
+        """Process one prompt chunk *continuing from* ``cache`` (the serving
+        engine's chunked/overlapped prefill calls this once per chunk).
+
+        Default: ``prefill`` — correct for any mixer whose prefill resumes
+        from the cache state and is position-independent, which is every
+        recurrent kind (the state pytree *is* the position).  Mixers whose
+        prefill depends on absolute position or ignores the incoming cache
+        (RoPE attention over a KV cache) must override this to continue at
+        the cached position.
+        """
+        return cls.prefill(params, cfg, x, cache)
+
+    @classmethod
     def decode(cls, params, cfg, x_t, cache):
         raise NotImplementedError(cls.kind)
 

@@ -1,274 +1,35 @@
-"""Continuous-batching decode engine with persistent per-slot recurrent state.
+"""Continuous-batching decode engine — thin façade over the
+scheduler/executor split.
 
-This is the serving-side embodiment of the paper: every layer's recurrent
-state (GDN S-matrices / SSD states / RG-LRU vectors) and KV caches live in
-*donated* device buffers with a slot axis — XLA updates them in place every
-tick, so state never leaves HBM and is touched exactly once per token by the
-fused decode step (the TPU analogue of the FPGA's BRAM-resident state).
+The engine used to be one module; it is now two layers (see
+``docs/serving.md``):
 
-The decode hot loop is device-resident end to end: sampling (greedy /
-temperature / top-k / top-p, per-slot parameters carried as arrays) and the
-EOS / token-budget finished flags run on device next to the state, and each
-engine tick fuses ``decode_block`` decode+sample steps into one ``lax.scan``
-(``lm.decode_steps``).  The host therefore syncs once per ``decode_block``
-tokens instead of once per token — the per-token logits round-trip was the
-serving-layer version of the HBM round-trip the paper eliminates.
+  * ``repro.serving.scheduler.Scheduler`` — host side: queue, slot
+    assignment, request lifecycle, overlapped chunked-prefill staging,
+    budget-aware tick policy, metrics.
+  * ``repro.serving.executor.DeviceExecutor`` — device side: the donated
+    slot/staging buffers and every jitted program (fused decode+sample
+    scan, chunked prefill with the fused on-device admit sample, slot
+    scatter).
 
-The slot buffers are sized and budgeted from the model's declarative
-``cache_specs`` (one ``ArraySpec`` per cache leaf, exported by each
-registered ``SequenceMixer``), so the engine is mixer-agnostic: a newly
-registered kind serves without any engine change.  Admit scatters a
-prefilled single-sequence cache into its slot with one jitted, donated
-``dynamic_update_slice`` over the whole pytree, and writes the request's
-sampling parameters into the sampler slot arrays alongside.
-
-Scheduler: admit-on-free-slot continuous batching —
-  1. each engine tick admits queued requests into free slots (per-request
-     prefill, then the caches are scattered into the batched slot buffers);
-     a request finished by its admit-time token (EOS, or max_new_tokens=1)
-     completes immediately and never occupies a slot;
-  2. one batched ``decode_block``-step scan advances *all* active slots,
-     masking slots that finish mid-block;
-  3. finished slots (EOS or max_new_tokens) are freed at the tick boundary.
-
-Per-request wall-clock metrics (TTFT, latency, throughput) are stamped by
-``submit``/admit/tick; ``DecodeEngine.metrics()`` aggregates them plus the
-decode-only µs/token that ``benchmarks/bench_serving.py`` sweeps over
-``decode_block``.
+``DecodeEngine`` is the backwards-compatible entry point: the PR-2 API
+(``submit`` / ``step`` / ``run_until_done`` / ``metrics``) is unchanged,
+with new keyword knobs — ``overlap`` (chunked prefill staged while
+resident slots decode; default on), ``prefill_chunk`` (chunk size) and
+``budget_ticks`` (budget-aware tick length; default on).  ``overlap`` and
+``budget_ticks`` move timing only: they run the same programs over the
+same chunk plan, so token streams are bitwise identical across those
+settings.  ``prefill_chunk`` changes the plan and hence float reduction
+order — greedy streams are pinned identical by the test suite, but
+temperature>0 draws may differ across chunk sizes.
 """
 from __future__ import annotations
 
-import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ArchConfig
-from repro.models import lm
-from repro.serving import sampling
+from repro.serving.scheduler import Request, Scheduler
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: Optional[np.ndarray] = None         # (T,) int32 token ids
-    prompt_embeds: Optional[np.ndarray] = None  # (T, d_model) — stub
-                                                # frontends (vlm/audio)
-    max_new_tokens: int = 16
-    temperature: float = 0.0            # 0 => greedy
-    top_k: int = 0                      # 0 => disabled
-    top_p: float = 1.0                  # 1.0 => disabled
-    eos_id: Optional[int] = None
-    output: List[int] = field(default_factory=list)
-    done: bool = False
-    # wall-clock stamps (perf_counter seconds), set by the engine
-    t_submit: Optional[float] = None
-    t_first: Optional[float] = None     # first token emitted (at admit)
-    t_done: Optional[float] = None
-
-    @property
-    def ttft_s(self) -> Optional[float]:
-        if self.t_first is None or self.t_submit is None:
-            return None
-        return self.t_first - self.t_submit
-
-    @property
-    def latency_s(self) -> Optional[float]:
-        if self.t_done is None or self.t_submit is None:
-            return None
-        return self.t_done - self.t_submit
-
-    @property
-    def tokens_per_s(self) -> Optional[float]:
-        lat = self.latency_s
-        if not lat:
-            return None
-        return len(self.output) / lat
+class DecodeEngine(Scheduler):
+    """Backwards-compatible façade over ``Scheduler`` + ``DeviceExecutor``."""
 
 
-def _scatter_fn(full, one, slot):
-    """Write a single-sequence cache pytree into batch position `slot`.
-    Leaves are (repeats, slots, ...) vs (repeats, 1, ...); `slot` is traced
-    so the whole-pytree scatter compiles once and runs in place (donated)."""
-    return jax.tree.map(
-        lambda f, o: jax.lax.dynamic_update_slice_in_dim(
-            f, o.astype(f.dtype), slot, axis=1),
-        full, one)
-
-
-class DecodeEngine:
-    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
-                 max_len: int = 256, seed: int = 0, decode_block: int = 1):
-        if decode_block < 1:
-            raise ValueError(f"decode_block must be >= 1, got {decode_block}")
-        self.cfg = cfg
-        self.params = params
-        self.max_slots = max_slots
-        self.max_len = max_len
-        self.seed = seed
-        self.decode_block = decode_block
-        # spec-driven slot buffers: shapes, dtypes and byte budgets all come
-        # from the mixers' declarative cache specs
-        self.spec = lm.cache_specs(cfg, max_slots, max_len)
-        self.caches = self.spec.zeros()
-        slot_spec = lm.cache_specs(cfg, 1, max_len)
-        self.state_bytes_per_slot = slot_spec.state_bytes
-        self.window_bytes_per_slot = slot_spec.window_bytes
-        self.cache_bytes = self.spec.nbytes
-        self.free: List[int] = list(range(max_slots))
-        self.active: Dict[int, Request] = {}
-        self.queue: Deque[Request] = deque()
-        self._all: List[Request] = []
-        self.tokens = jnp.zeros((max_slots,), jnp.int32)
-        # per-slot sampler state lives in the slot buffers (donated each
-        # tick with the caches); free slots are done=True
-        self.sampler = sampling.init_state(max_slots)
-        self._decode = jax.jit(
-            lambda p, t, c, s: lm.decode_steps(
-                p, cfg, t, c, decode_block,
-                sampler=s, sample_fn=sampling.sample),
-            donate_argnums=(2, 3))
-        self._prefill = jax.jit(
-            lambda p, t, c: lm.prefill(p, cfg, c, tokens=t))
-        self._prefill_embeds = jax.jit(
-            lambda p, e, c: lm.prefill(p, cfg, c, embeds=e))
-        self._scatter = jax.jit(_scatter_fn, donate_argnums=(0,))
-        self.ticks = 0
-        self.decode_s = 0.0         # wall time inside decode ticks (+ sync)
-        self.decoded_tokens = 0     # tokens emitted by ticks (not admit)
-        self._metrics_from = 0      # _all watermark set by reset_metrics
-
-    # ------------------------------------------------------------- admit
-    def submit(self, req: Request):
-        # reject out-of-range sampling params up front: past this point the
-        # host mirror and the device pipeline must behave identically
-        if not 0.0 < req.top_p <= 1.0:
-            raise ValueError(f"req {req.rid}: top_p must be in (0, 1], "
-                             f"got {req.top_p}")
-        if req.top_k < 0:
-            raise ValueError(f"req {req.rid}: top_k must be >= 0, "
-                             f"got {req.top_k}")
-        if req.temperature <= 0.0 and (req.top_k > 0 or req.top_p < 1.0):
-            raise ValueError(f"req {req.rid}: top_k/top_p have no effect "
-                             f"at temperature<=0 (greedy); set "
-                             f"temperature > 0")
-        if req.max_new_tokens < 1:
-            raise ValueError(f"req {req.rid}: max_new_tokens must be >= 1 "
-                             f"(admit always emits the first token), got "
-                             f"{req.max_new_tokens}")
-        req.t_submit = time.perf_counter()
-        self.queue.append(req)
-        self._all.append(req)
-
-    def _finished(self, req: Request, tok: int) -> bool:
-        return (len(req.output) >= req.max_new_tokens
-                or (req.eos_id is not None and tok == req.eos_id))
-
-    def _admit(self):
-        while self.queue and self.free:
-            req = self.queue.popleft()
-            one = lm.init_caches(self.cfg, 1, self.max_len)
-            if req.prompt_embeds is not None:
-                logits, one = self._prefill_embeds(
-                    self.params,
-                    jnp.asarray(req.prompt_embeds,
-                                jnp.dtype(self.cfg.act_dtype))[None],
-                    one)
-            else:
-                logits, one = self._prefill(
-                    self.params, jnp.asarray(req.prompt)[None, :], one)
-            # admit-time token: host draw through the NumPy mirror of the
-            # device pipeline, from a per-request stream so the sequence is
-            # independent of slot placement and decode_block
-            rng = np.random.default_rng((self.seed, req.rid))
-            tok = sampling.sample_np(rng, np.asarray(logits)[0],
-                                     temperature=req.temperature,
-                                     top_k=req.top_k, top_p=req.top_p)
-            req.output.append(int(tok))
-            req.t_first = time.perf_counter()
-            if self._finished(req, tok):
-                # finished at admit (EOS or max_new_tokens=1): complete now,
-                # never occupy a slot or decode an extra token
-                req.done = True
-                req.t_done = req.t_first
-                continue
-            slot = self.free.pop(0)
-            self.caches = self._scatter(self.caches, one,
-                                        jnp.int32(slot))
-            self.tokens = self.tokens.at[slot].set(int(tok))
-            self.sampler = sampling.admit_slot(
-                self.sampler, slot, seed=self.seed, rid=req.rid,
-                temperature=req.temperature, top_k=req.top_k,
-                top_p=req.top_p, eos_id=req.eos_id,
-                budget=req.max_new_tokens - len(req.output))
-            self.active[slot] = req
-
-    # ------------------------------------------------------------- tick
-    def step(self):
-        """One engine tick: admit, then one fused ``decode_block``-token
-        decode+sample scan, then emit and free — a single host sync."""
-        self._admit()
-        if not self.active:
-            return
-        t0 = time.perf_counter()
-        toks, valid, self.tokens, self.caches, self.sampler = self._decode(
-            self.params, self.tokens, self.caches, self.sampler)
-        toks = np.asarray(toks)          # (k, S) — the one host sync
-        valid = np.asarray(valid)        # (k, S) live-going-into-step flags
-        now = time.perf_counter()
-        self.decode_s += now - t0
-        self.ticks += 1
-        for slot, req in list(self.active.items()):
-            for j in range(toks.shape[0]):
-                if not valid[j, slot]:
-                    break
-                tok = int(toks[j, slot])
-                req.output.append(tok)
-                self.decoded_tokens += 1
-                if self._finished(req, tok):
-                    req.done = True
-                    req.t_done = now
-                    del self.active[slot]
-                    self.free.append(slot)
-                    break
-
-    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
-        for _ in range(max_ticks):
-            if not self.queue and not self.active:
-                break
-            self.step()
-        return [r for r in self._all if r.done]
-
-    # ----------------------------------------------------------- metrics
-    def reset_metrics(self):
-        """Zero the aggregate counters (benchmarks call this after a
-        warm-up pass so compile time stays out of the measurement)."""
-        self.ticks = 0
-        self.decode_s = 0.0
-        self.decoded_tokens = 0
-        self._metrics_from = len(self._all)
-
-    def metrics(self) -> Dict[str, float]:
-        """Aggregate serving metrics over requests completed since the
-        last ``reset_metrics`` (all requests by default)."""
-        done = [r for r in self._all[self._metrics_from:] if r.done]
-        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
-        lats = [r.latency_s for r in done if r.latency_s is not None]
-        tps = [r.tokens_per_s for r in done if r.tokens_per_s is not None]
-        return {
-            "requests": len(done),
-            "tokens": sum(len(r.output) for r in done),
-            "ticks": self.ticks,
-            "decode_block": self.decode_block,
-            "decoded_tokens": self.decoded_tokens,
-            "decode_s": self.decode_s,
-            "decode_us_per_token":
-                self.decode_s / max(1, self.decoded_tokens) * 1e6,
-            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
-            "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
-            "mean_tokens_per_s": float(np.mean(tps)) if tps else 0.0,
-        }
+__all__ = ["DecodeEngine", "Request"]

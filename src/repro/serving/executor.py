@@ -1,0 +1,260 @@
+"""Device executor: the serving engine's jitted donated-buffer programs.
+
+This is the device half of the scheduler/executor split.  Everything that
+touches an accelerator buffer lives here; everything that touches a
+``Request`` lives in ``repro.serving.scheduler``.  The executor owns
+
+  * the **slot buffers** — every layer's recurrent state / KV cache with a
+    leading slot axis, the per-slot sampler arrays and the per-slot last
+    tokens, all donated through every tick so XLA updates them in place
+    (the TPU analogue of the paper's BRAM-resident state);
+  * the **staging buffers** — a single-sequence cache pytree plus a 1-row
+    sampler state that chunked prefill streams into while the resident
+    slots keep decoding, scattered into a real slot only once staging
+    completes (the serving-layer version of the paper's
+    prepare/compute/store overlap);
+  * the **programs** — one jitted, donated program per static shape:
+    - ``decode(k)``: the ``lm.decode_steps`` fused decode+sample scan, one
+      program per bucketed tick length k (budget-aware ticks pick the
+      smallest bucket covering the max remaining per-slot budget);
+    - ``stage_chunk_scan`` / ``stage_chunk`` / ``stage_admit``: chunked
+      prefill into the staging cache — full chunks of ``prefill_chunk``
+      tokens run m-at-a-time under one ``lax.scan`` (one program per
+      power-of-two m), the ragged tail is decomposed into power-of-two
+      sub-chunks (one program per size), and the final sub-chunk fuses the
+      first-token draw on device (``lm.prefill_sample``), so admit never
+      ships logits to the host;
+    - ``scatter(slot)``: one donated ``dynamic_update_slice`` over the
+      whole staging pytree + sampler row + first token into slot ``slot``.
+
+  Every program is compiled lazily on first use and cached by its static
+  shape, so the compile-cache size is bounded by the bucketing: O(log)
+  distinct chunk/scan sizes and O(log) tick lengths.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.serving import sampling
+
+PlanStep = Tuple[str, int]   # ("scan", m chunks) | ("chunk"|"admit", s tokens)
+
+# cap on chunks per scan dispatch: a single scan step is one program on the
+# tick thread, so unbounded m would stall resident decode slots for nearly
+# the whole prompt — bounding it keeps the overlap granular (and shrinks
+# the compile cache to scan programs of m in {1, 2, 4})
+_MAX_SCAN_CHUNKS = 4
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (n.bit_length() - 1)
+
+
+def _scatter_fn(caches, sampler, tokens, staging, row, tok, slot):
+    """Write the staging cache pytree, sampler row and first token into
+    slot ``slot``.  Cache leaves are (repeats, slots, ...) vs
+    (repeats, 1, ...); ``slot`` is traced so the whole-pytree scatter
+    compiles once and runs in place (donated)."""
+    caches = jax.tree.map(
+        lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), slot, axis=1),
+        caches, staging)
+    sampler = {
+        k: jax.lax.dynamic_update_slice_in_dim(
+            v, row[k].astype(v.dtype), slot, axis=0)
+        for k, v in sampler.items()}
+    tokens = jax.lax.dynamic_update_slice(
+        tokens, tok.astype(tokens.dtype), (slot,))
+    return caches, sampler, tokens
+
+
+class DeviceExecutor:
+    """Owns the device buffers and jitted programs of one decode engine."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int,
+                 max_len: int, decode_block: int, prefill_chunk: int = 16):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.decode_block = decode_block
+        # chunks scatter into rolling KV buffers, whose size is
+        # min(window, max_len) — one chunk must not wrap a buffer
+        limit = min(max_len, cfg.window) if cfg.window else max_len
+        self.prefill_chunk = max(1, min(prefill_chunk, limit))
+
+        # spec-driven slot buffers: shapes, dtypes and byte budgets all
+        # come from the mixers' declarative cache specs
+        self.spec = lm.cache_specs(cfg, max_slots, max_len)
+        self.caches = self.spec.zeros()
+        slot_spec = lm.cache_specs(cfg, 1, max_len)
+        self.state_bytes_per_slot = slot_spec.state_bytes
+        self.window_bytes_per_slot = slot_spec.window_bytes
+        self.cache_bytes = self.spec.nbytes
+        self.tokens = jnp.zeros((max_slots,), jnp.int32)
+        self.sampler = sampling.init_state(max_slots)
+
+        # staging buffers (prefill overlap target); the sampler row is
+        # produced by the fused admit program, not materialized up front
+        self._staging_zeros = jax.jit(lambda: lm.init_caches(cfg, 1, max_len))
+        self.staging = self._staging_zeros()
+        self._staging_clean = True
+        self._staging_args = None
+        self.staging_row = None
+        self.staging_tok: Optional[jax.Array] = None
+
+        # lazily-built program caches, keyed by static shape
+        self._decode_p: Dict[int, object] = {}
+        self._scan_p: Dict[Tuple[int, bool], object] = {}
+        self._chunk_p: Dict[Tuple[int, bool], object] = {}
+        self._admit_p: Dict[Tuple[int, bool], object] = {}
+        # donate only the slot buffers: the staging pytree's (repeats, 1,
+        # ...) leaves have no same-shape output to alias (XLA would warn)
+        self._scatter_p = jax.jit(_scatter_fn, donate_argnums=(0, 1, 2))
+
+    # ------------------------------------------------------------- plans
+    def plan_prefill(self, length: int) -> List[PlanStep]:
+        """Decompose a prompt of ``length`` tokens into dispatch steps.
+
+        Full ``prefill_chunk``-size chunks run m-at-a-time under the scan
+        program, m a power of two capped at ``_MAX_SCAN_CHUNKS`` (each
+        program is compiled once ever, and no single dispatch holds the
+        tick thread for more than that many chunks); the ragged tail
+        (always >= 1 token, so the final logits always come from a tail
+        step) is decomposed into power-of-two sub-chunks, the last of
+        which is the fused-sample admit program.  Retraces are bounded by
+        the bucketing: at most 3 scan programs + 2 log2(chunk) tail
+        programs.
+        """
+        if length < 1:
+            raise ValueError(f"cannot prefill an empty prompt ({length})")
+        C = self.prefill_chunk
+        tail = (length - 1) % C + 1
+        n_full = (length - tail) // C
+        steps: List[PlanStep] = []
+        while n_full:
+            m = min(_pow2_floor(n_full), _MAX_SCAN_CHUNKS)
+            steps.append(("scan", m))
+            n_full -= m
+        while tail:
+            s = _pow2_floor(tail)
+            steps.append(("chunk", s))
+            tail -= s
+        steps[-1] = ("admit", steps[-1][1])
+        return steps
+
+    # ----------------------------------------------------------- staging
+    def stage_begin(self, *, seed: int, rid: int, temperature: float,
+                    top_k: int, top_p: float, eos_id, budget: int):
+        """Reset the staging cache and record the request's sampling
+        parameters.  The 1-row sampler state itself is built *inside* the
+        fused admit program (key folded from (seed, rid) there, so the
+        draw stream is independent of slot placement and tick length) —
+        building it host-side would cost ~17 tiny dispatches per admit."""
+        if not self._staging_clean:
+            self.staging = self._staging_zeros()
+        self._staging_clean = False
+        self._staging_args = (
+            np.int32(seed), np.int32(rid), np.float32(temperature),
+            np.int32(top_k), np.float32(top_p),
+            np.int32(-1 if eos_id is None else eos_id), np.int32(budget))
+        self.staging_row = None
+        self.staging_tok = None
+
+    def _as_chunk(self, chunk, lead_shape):
+        """Flat prompt slice -> device chunk.  (n,) int tokens or (n, d)
+        float embeds (the stub VLM/audio frontends), reshaped to the
+        program's chunk layout."""
+        chunk = np.asarray(chunk)
+        if chunk.dtype.kind == "f":
+            x = jnp.asarray(chunk, jnp.dtype(self.cfg.act_dtype))
+            return x.reshape(*lead_shape, x.shape[-1]), True
+        return jnp.asarray(chunk, jnp.int32).reshape(lead_shape), False
+
+    def stage_chunk_scan(self, chunks):
+        """Advance staging by m full chunks in one dispatch.  chunks: flat
+        (m * C,) tokens or (m * C, d) embeds."""
+        m = len(chunks) // self.prefill_chunk
+        x, is_embeds = self._as_chunk(chunks, (1, m, self.prefill_chunk))
+        prog = self._scan_p.get((m, is_embeds))
+        if prog is None:
+            kw = "embeds" if is_embeds else "tokens"
+            prog = jax.jit(
+                lambda p, t, c, kw=kw: lm.prefill_chunk_scan(
+                    p, self.cfg, c, **{kw: t}),
+                donate_argnums=(2,))
+            self._scan_p[(m, is_embeds)] = prog
+        self.staging = prog(self.params, x, self.staging)
+
+    def stage_chunk(self, chunk):
+        """Advance staging by one interior tail sub-chunk (no logits)."""
+        s = len(chunk)
+        x, is_embeds = self._as_chunk(chunk, (1, s))
+        prog = self._chunk_p.get((s, is_embeds))
+        if prog is None:
+            kw = "embeds" if is_embeds else "tokens"
+            prog = jax.jit(
+                lambda p, t, c, kw=kw: lm.prefill_chunk(
+                    p, self.cfg, c, **{kw: t})[1],
+                donate_argnums=(2,))
+            self._chunk_p[(s, is_embeds)] = prog
+        self.staging = prog(self.params, x, self.staging)
+
+    def stage_admit(self, chunk) -> jax.Array:
+        """Final sub-chunk + fused on-device first-token draw: one dispatch
+        builds the request's sampler row (``sampling.admit_row``), prefills
+        the chunk, samples the first token and advances the row (key split,
+        budget decrement, EOS/budget done flag).  Returns the (1,) token
+        array (still on device — the scheduler syncs it when it stamps
+        TTFT) and leaves the advanced row for the slot scatter."""
+        s = len(chunk)
+        x, is_embeds = self._as_chunk(chunk, (1, s))
+        prog = self._admit_p.get((s, is_embeds))
+        if prog is None:
+            kw = "embeds" if is_embeds else "tokens"
+
+            def _admit(p, t, c, seed, rid, temp, top_k, top_p, eos, budget,
+                       kw=kw):
+                row = sampling.admit_row(seed, rid, temp, top_k, top_p,
+                                         eos, budget)
+                return lm.prefill_sample(p, self.cfg, c, row,
+                                         sampling.sample, **{kw: t})
+
+            prog = jax.jit(_admit, donate_argnums=(2,))
+            self._admit_p[(s, is_embeds)] = prog
+        self.staging_tok, self.staging_row, self.staging = prog(
+            self.params, x, self.staging, *self._staging_args)
+        return self.staging_tok
+
+    def scatter(self, slot: int):
+        """Scatter the completed staging cache + sampler row + first token
+        into slot ``slot`` (one donated dispatch), then reset staging."""
+        self.caches, self.sampler, self.tokens = self._scatter_p(
+            self.caches, self.sampler, self.tokens, self.staging,
+            self.staging_row, self.staging_tok, jnp.int32(slot))
+        self.staging = self._staging_zeros()
+        self._staging_clean = True
+        self.staging_row = None
+        self.staging_tok = None
+
+    # ------------------------------------------------------------- ticks
+    def decode(self, k: int):
+        """One fused k-step decode+sample tick over all slots; the single
+        host sync reads the (k, slots) token/validity arrays."""
+        prog = self._decode_p.get(k)
+        if prog is None:
+            prog = jax.jit(
+                lambda p, t, c, s, k=k: lm.decode_steps(
+                    p, self.cfg, t, c, k,
+                    sampler=s, sample_fn=sampling.sample),
+                donate_argnums=(2, 3))
+            self._decode_p[k] = prog
+        toks, valid, self.tokens, self.caches, self.sampler = prog(
+            self.params, self.tokens, self.caches, self.sampler)
+        return np.asarray(toks), np.asarray(valid)

@@ -25,10 +25,12 @@ buffers:
 
 ``sample`` consumes a (S, V) logits batch and advances the state; the
 filtering pipeline is: log-softmax -> temperature scale -> top-k mask ->
-top-p (nucleus) mask -> Gumbel-max draw.  ``filter_logits_np`` /
-``sample_np`` are the NumPy mirror of the same pipeline, used by the
-engine's admit-time (prefill) sampling on the host and by the tests as
-the reference implementation.
+top-p (nucleus) mask -> Gumbel-max draw.  The same function is the fused
+admit head of the chunked-prefill program (``lm.prefill_sample`` runs it
+on a 1-row state over the last prompt token's logits), so the first token
+never round-trips through the host either.  ``filter_logits_np`` /
+``sample_np`` are the NumPy mirror of the filtering pipeline, kept as the
+test reference implementation.
 """
 from __future__ import annotations
 
@@ -79,6 +81,26 @@ def admit_slot(state: SamplerState, slot: int, *, seed: int, rid: int,
             jnp.int32(-1 if eos_id is None else eos_id)),
         "remaining": state["remaining"].at[slot].set(jnp.int32(budget)),
         "done": state["done"].at[slot].set(False),
+    }
+
+
+def admit_row(seed, rid, temperature, top_k, top_p, eos_id,
+              budget) -> SamplerState:
+    """One-row sampler state for a request being admitted — the staging
+    mirror of ``admit_slot``, built from (possibly traced) scalars so the
+    executor's fused admit program constructs it on device in the same
+    dispatch that prefills the final chunk and draws the first token
+    (``eos_id`` is -1 for "no EOS").  The slot scatter then writes the
+    advanced row into the slot arrays."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+    return {
+        "key": key.astype(jnp.uint32)[None],
+        "temperature": jnp.reshape(jnp.float32(temperature), (1,)),
+        "top_k": jnp.reshape(jnp.int32(top_k), (1,)),
+        "top_p": jnp.reshape(jnp.float32(top_p), (1,)),
+        "eos_id": jnp.reshape(jnp.int32(eos_id), (1,)),
+        "remaining": jnp.reshape(jnp.int32(budget), (1,)),
+        "done": jnp.zeros((1,), bool),
     }
 
 
@@ -181,8 +203,9 @@ def filter_logits_np(logits: np.ndarray, temperature: float, top_k: int,
 def sample_np(rng: np.random.Generator, logits: np.ndarray, *,
               temperature: float, top_k: int = 0,
               top_p: float = 1.0) -> int:
-    """Host-side draw matching the device pipeline's distribution (used
-    for the admit-time token, whose logits come from prefill)."""
+    """Host-side draw matching the device pipeline's distribution (the
+    test mirror; the serving admit path draws on device via the fused
+    ``lm.prefill_sample`` head since the scheduler/executor split)."""
     if temperature <= 0.0:
         return int(np.argmax(logits))
     scaled = filter_logits_np(logits, temperature, top_k, top_p)

@@ -1,0 +1,381 @@
+"""Host scheduler: request lifecycle, slot assignment and tick policy.
+
+This is the host half of the scheduler/executor split (the device half —
+slot/staging buffers and every jitted program — is
+``repro.serving.executor.DeviceExecutor``).  The scheduler never touches a
+device buffer directly; it decides *what* to dispatch and *when*:
+
+  1. **submit** validates a request (sampling parameters, token budget,
+     prompt length vs ``max_len`` — an over-long prompt would wrap the
+     rolling window caches mid-prompt and silently corrupt them) and
+     appends it to a FIFO queue.
+  2. **staging admit** (overlapped, the default): queued requests prefill
+     *chunk by chunk* into the executor's staging buffers at tick
+     boundaries.  While free slots exist this is work-conserving (same
+     admits as the serialized baseline); once every slot is busy, the
+     head-of-queue request still prefills ahead of any free slot, emits
+     its first token (the final chunk fuses the draw on device — no host
+     ``sample_np``), and is held staged-ready until a slot frees.  TTFT is
+     stamped when that token is device-confirmed (synced to the host),
+     not when the dispatch is queued.  With ``overlap=False`` the same
+     programs run back-to-back behind a free slot (the serialized
+     baseline — token streams are bitwise identical, only timing moves).
+  3. **tick** (`step`): one fused decode+sample scan over all slots.  The
+     tick length is **budget-aware**: the smallest power-of-two bucket
+     (capped at ``decode_block``) covering the largest remaining per-slot
+     budget, so the tail ticks of a batch of short budgets stop burning
+     masked steps — bucketing bounds the compile cache.
+  4. finished slots (device EOS/budget flags) are freed at tick boundaries.
+
+Wall-clock metrics (TTFT, latency, throughput) are stamped per request;
+``metrics()`` aggregates them plus the decode-only µs/token that
+``benchmarks/bench_serving.py`` sweeps.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.serving.executor import DeviceExecutor
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: Optional[np.ndarray] = None         # (T,) int32 token ids
+    prompt_embeds: Optional[np.ndarray] = None  # (T, d_model) — stub
+                                                # frontends (vlm/audio)
+    max_new_tokens: int = 16
+    temperature: float = 0.0            # 0 => greedy
+    top_k: int = 0                      # 0 => disabled
+    top_p: float = 1.0                  # 1.0 => disabled
+    eos_id: Optional[int] = None
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+    # wall-clock stamps (perf_counter seconds), set by the engine
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None     # first token device-confirmed
+    t_done: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.t_first is None or self.t_submit is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None or self.t_submit is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def tokens_per_s(self) -> Optional[float]:
+        lat = self.latency_s
+        if not lat:
+            return None
+        return len(self.output) / lat
+
+    @property
+    def prompt_len(self) -> Optional[int]:
+        if self.prompt is not None:
+            return int(np.asarray(self.prompt).shape[-1])
+        if self.prompt_embeds is not None:
+            return int(np.asarray(self.prompt_embeds).shape[0])
+        return None
+
+    @property
+    def _inputs(self):
+        return self.prompt if self.prompt is not None else self.prompt_embeds
+
+
+class Scheduler:
+    """Continuous-batching decode scheduler over a ``DeviceExecutor``."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
+                 max_len: int = 256, seed: int = 0, decode_block: int = 1,
+                 overlap: bool = True, prefill_chunk: int = 16,
+                 budget_ticks: bool = True):
+        if decode_block < 1:
+            raise ValueError(f"decode_block must be >= 1, got {decode_block}")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.seed = seed
+        self.decode_block = decode_block
+        self.overlap = overlap
+        self.budget_ticks = budget_ticks
+        self.executor = DeviceExecutor(
+            cfg, params, max_slots=max_slots, max_len=max_len,
+            decode_block=decode_block, prefill_chunk=prefill_chunk)
+        self.free: Deque[int] = deque(range(max_slots))
+        self.active: Dict[int, Request] = {}
+        self.queue: Deque[Request] = deque()
+        self._all: List[Request] = []
+        # staging state machine (one request prefilling ahead of its slot)
+        self._staging: Optional[Request] = None
+        self._plan = []
+        self._plan_pos = 0
+        self._prompt_pos = 0
+        self._staged_ready = False
+        self.ticks = 0
+        self.decode_s = 0.0         # wall time inside decode ticks (+ sync)
+        self.decoded_tokens = 0     # tokens emitted by ticks (not admit)
+        self.stage_dispatches = 0   # prefill-chunk programs dispatched
+        self._metrics_from = 0      # _all watermark set by reset_metrics
+
+    # ---------------------------------------------------- compat surface
+    @property
+    def spec(self):
+        return self.executor.spec
+
+    @property
+    def prefill_chunk(self) -> int:
+        return self.executor.prefill_chunk
+
+    @property
+    def state_bytes_per_slot(self) -> int:
+        return self.executor.state_bytes_per_slot
+
+    @property
+    def window_bytes_per_slot(self) -> int:
+        return self.executor.window_bytes_per_slot
+
+    @property
+    def cache_bytes(self) -> int:
+        return self.executor.cache_bytes
+
+    @property
+    def caches(self):
+        return self.executor.caches
+
+    @property
+    def tokens(self):
+        return self.executor.tokens
+
+    @property
+    def sampler(self):
+        return self.executor.sampler
+
+    # ------------------------------------------------------------ submit
+    def submit(self, req: Request):
+        # reject out-of-range sampling params up front: past this point the
+        # host mirror and the device pipeline must behave identically
+        if not 0.0 < req.top_p <= 1.0:
+            raise ValueError(f"req {req.rid}: top_p must be in (0, 1], "
+                             f"got {req.top_p}")
+        if req.top_k < 0:
+            raise ValueError(f"req {req.rid}: top_k must be >= 0, "
+                             f"got {req.top_k}")
+        if req.temperature <= 0.0 and (req.top_k > 0 or req.top_p < 1.0):
+            raise ValueError(f"req {req.rid}: top_k/top_p have no effect "
+                             f"at temperature<=0 (greedy); set "
+                             f"temperature > 0")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"req {req.rid}: max_new_tokens must be >= 1 "
+                             f"(admit always emits the first token), got "
+                             f"{req.max_new_tokens}")
+        T = req.prompt_len
+        if T is None:
+            raise ValueError(f"req {req.rid}: needs a prompt or "
+                             f"prompt_embeds")
+        if T < 1:
+            raise ValueError(f"req {req.rid}: empty prompt")
+        if T > self.max_len:
+            raise ValueError(
+                f"req {req.rid}: prompt length {T} exceeds max_len "
+                f"{self.max_len} — the window caches would wrap "
+                f"mid-prompt and silently corrupt the context")
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+        self._all.append(req)
+
+    def _finished(self, req: Request, tok: int) -> bool:
+        return (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id))
+
+    # ----------------------------------------------------------- staging
+    def _stage_start(self, req: Request):
+        self._staging = req
+        self._plan = self.executor.plan_prefill(req.prompt_len)
+        self._plan_pos = 0
+        self._prompt_pos = 0
+        self._staged_ready = False
+        self.executor.stage_begin(
+            seed=self.seed, rid=req.rid, temperature=req.temperature,
+            top_k=req.top_k, top_p=req.top_p, eos_id=req.eos_id,
+            budget=req.max_new_tokens)
+
+    def _stage_dispatch_one(self):
+        kind, n = self._plan[self._plan_pos]
+        inputs = self._staging._inputs
+        size = n * self.executor.prefill_chunk if kind == "scan" else n
+        chunk = inputs[self._prompt_pos:self._prompt_pos + size]
+        if kind == "scan":
+            self.executor.stage_chunk_scan(chunk)
+        elif kind == "chunk":
+            self.executor.stage_chunk(chunk)
+        else:
+            self.executor.stage_admit(chunk)
+        self._prompt_pos += size
+        self._plan_pos += 1
+        self.stage_dispatches += 1
+
+    def _stage_finish(self):
+        """Plan complete: sync the fused first token (this is the
+        device-confirmed admit — TTFT is stamped here, not when the
+        dispatch was queued) and either complete the request (EOS /
+        max_new_tokens=1, never occupying a slot) or hold it staged-ready
+        until a slot frees."""
+        req = self._staging
+        tok = int(np.asarray(self.executor.staging_tok)[0])
+        req.t_first = time.perf_counter()
+        req.output.append(tok)
+        if self._finished(req, tok):
+            req.done = True
+            req.t_done = req.t_first
+            self._staging = None
+            return
+        self._staged_ready = True
+
+    def _stage_scatter(self):
+        slot = self.free.popleft()
+        self.executor.scatter(slot)
+        self.active[slot] = self._staging
+        self._staging = None
+        self._staged_ready = False
+
+    def _admit(self):
+        """Advance the admit pipeline at a tick boundary.
+
+        Work-conserving: while free slots exist, queued requests prefill
+        and scatter exactly as the serialized baseline does.  The overlap
+        is purely additive — when every slot is busy, the head-of-queue
+        request *still* streams its chunk plan into the staging buffer,
+        **one chunk dispatch per tick** so the resident slots keep
+        decoding between chunks, and emits its fused-sample first token at
+        plan completion, held staged-ready until a slot frees (at most one
+        such ahead-of-slot prefill can be outstanding, because the staged
+        request owns the staging buffer until its scatter).  Overlapped
+        TTFT is therefore never structurally worse than serialized, and
+        strictly better whenever a request would have had to wait for a
+        slot before prefilling."""
+        while True:
+            if self._staging is None:
+                if not self.queue:
+                    return
+                if not self.free and not self.overlap:
+                    return      # serialized admit waits for a slot up front
+                self._stage_start(self.queue.popleft())
+            if self._staged_ready:
+                if not self.free:
+                    return      # token already emitted; slot-bound
+                self._stage_scatter()
+                continue        # next queued request may start staging
+            self._stage_dispatch_one()
+            if self._plan_pos == len(self._plan):
+                self._stage_finish()
+            elif not self.free and self.active:
+                return          # ahead-of-slot: yield so the resident
+                                # slots decode between prefill chunks
+
+    # -------------------------------------------------------------- tick
+    def _tick_k(self) -> int:
+        """Budget-aware tick length: smallest power-of-two bucket (capped
+        at ``decode_block``) covering the largest remaining per-slot
+        budget — the all-slots-finish-early tail stops burning masked
+        scan steps, and bucketing bounds the program cache."""
+        if not self.budget_ticks:
+            return self.decode_block
+        need = max(r.max_new_tokens - len(r.output)
+                   for r in self.active.values())
+        k = 1
+        while k < need and k < self.decode_block:
+            k <<= 1
+        return min(k, self.decode_block)
+
+    def step(self):
+        """One engine tick: advance the admit pipeline (free slots fill as
+        in the serialized baseline, plus at most one ahead-of-slot staged
+        prefill when every slot is busy), then one fused decode+sample
+        scan, then emit and free — a single host sync for the decode
+        block."""
+        self._admit()
+        if not self.active:
+            return
+        k = self._tick_k()
+        t0 = time.perf_counter()
+        toks, valid = self.executor.decode(k)   # (k, S) — the one host sync
+        now = time.perf_counter()
+        self.decode_s += now - t0
+        self.ticks += 1
+        for slot, req in list(self.active.items()):
+            for j in range(toks.shape[0]):
+                if not valid[j, slot]:
+                    break
+                tok = int(toks[j, slot])
+                req.output.append(tok)
+                self.decoded_tokens += 1
+                if self._finished(req, tok):
+                    req.done = True
+                    req.t_done = now
+                    del self.active[slot]
+                    self.free.append(slot)
+                    break
+
+    def run_until_done(self, max_ticks: int = 10_000, *,
+                       strict: bool = True) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and not self.active and self._staging is None:
+                break
+            self.step()
+        if self.queue or self.active or self._staging is not None:
+            msg = (f"run_until_done: max_ticks={max_ticks} exhausted with "
+                   f"{len(self.queue)} queued, {len(self.active)} active, "
+                   f"{int(self._staging is not None)} staging request(s) "
+                   f"unfinished — raise max_ticks or inspect the engine")
+            if strict:
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning)
+        return [r for r in self._all if r.done]
+
+    # ----------------------------------------------------------- metrics
+    def reset_metrics(self):
+        """Zero the aggregate counters (benchmarks call this after a
+        warm-up pass so compile time stays out of the measurement)."""
+        self.ticks = 0
+        self.decode_s = 0.0
+        self.decoded_tokens = 0
+        self.stage_dispatches = 0
+        self._metrics_from = len(self._all)
+
+    def metrics(self) -> Dict[str, float]:
+        """Aggregate serving metrics over requests completed since the
+        last ``reset_metrics`` (all requests by default)."""
+        done = [r for r in self._all[self._metrics_from:] if r.done]
+        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        lats = [r.latency_s for r in done if r.latency_s is not None]
+        tps = [r.tokens_per_s for r in done if r.tokens_per_s is not None]
+        return {
+            "requests": len(done),
+            "tokens": sum(len(r.output) for r in done),
+            "ticks": self.ticks,
+            "decode_block": self.decode_block,
+            "decoded_tokens": self.decoded_tokens,
+            "decode_s": self.decode_s,
+            "decode_us_per_token":
+                self.decode_s / max(1, self.decoded_tokens) * 1e6,
+            "stage_dispatches": self.stage_dispatches,
+            "overlap": int(self.overlap),
+            "prefill_chunk": self.executor.prefill_chunk,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
+            "mean_tokens_per_s": float(np.mean(tps)) if tps else 0.0,
+        }

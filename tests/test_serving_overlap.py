@@ -1,0 +1,301 @@
+"""Scheduler/executor split: overlapped-staging admit == serialized admit.
+
+The overlap machinery (chunked prefill into the staging buffer, fused
+on-device first-token sample, budget-aware tick lengths) must move *when*
+work happens, never *what* is computed: every test here pins a pair of
+engine configurations to bitwise-identical token streams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serving import sampling
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.executor import DeviceExecutor
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def gdn_model():
+    cfg = configs.get_arch("qwen3-next-gdn").reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve(cfg, params, *, overlap, stochastic=False, decode_block=4,
+           budget_ticks=True, prefill_chunk=8, n=6, slots=2):
+    eng = DecodeEngine(cfg, params, max_slots=slots, max_len=64,
+                       decode_block=decode_block, overlap=overlap,
+                       prefill_chunk=prefill_chunk,
+                       budget_ticks=budget_ticks)
+    reqs = [Request(rid=i,
+                    prompt=np.arange(1, 7 + 3 * i, dtype=np.int32),
+                    max_new_tokens=4 + i,
+                    temperature=0.8 if stochastic else 0.0,
+                    top_k=10 if stochastic else 0,
+                    top_p=0.9 if stochastic else 1.0)
+            for i in range(n)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return eng, [list(r.output) for r in reqs]
+
+
+# ------------------------------------------- chunked prefill == sequential
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "recurrentgemma-2b",
+                                  "yi-9b"])
+def test_chunked_prefill_matches_serial_decode(arch):
+    """Multi-chunk prefill resume across every mixer family: the ssm /
+    rglru state carries (conv carries included) and the attention
+    rolling-buffer wrap (prompt longer than the KV buffer, max_len 16 <
+    T=21) must reproduce token-by-token sequential decode."""
+    cfg = configs.get_arch(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    T, max_len = 21, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, T), 1, cfg.vocab)
+
+    serial = lm.init_caches(cfg, 1, max_len)
+    logits = None
+    for t in range(T):
+        logits, serial = lm.decode_step(params, cfg, tokens[:, t], serial)
+
+    chunked = lm.init_caches(cfg, 1, max_len)
+    pos = 0
+    for s in (8, 8, 4, 1):                # ragged chunks, wrap mid-prompt
+        x, chunked = lm.prefill_chunk(params, cfg, chunked,
+                                      tokens=tokens[:, pos:pos + s])
+        pos += s
+    from repro.models import layers
+    h = layers.rmsnorm_fwd(params["final_norm"], x[:, -1], cfg.norm_eps)
+    np.testing.assert_allclose(np.asarray(lm._logits(params, cfg, h)),
+                               np.asarray(logits), rtol=2e-4, atol=2e-4)
+    for a, b in zip(jax.tree.leaves(chunked), jax.tree.leaves(serial)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        if a.dtype.kind in "iub":          # cache lengths etc. — exact
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------- overlap == serial
+
+def test_overlap_parity_greedy(gdn_model):
+    """Queued requests streamed through the staging buffer emit exactly
+    the tokens the serialized prefill-behind-a-free-slot path emits."""
+    cfg, params = gdn_model
+    _, ser = _serve(cfg, params, overlap=False)
+    _, ovl = _serve(cfg, params, overlap=True)
+    assert ovl == ser
+
+
+def test_overlap_parity_stochastic(gdn_model):
+    """Per-request device RNG streams make sampled outputs identical too —
+    admit consumes the first split of the (seed, rid) key on device, and
+    the scattered row continues the same stream in the slot."""
+    cfg, params = gdn_model
+    _, ser = _serve(cfg, params, overlap=False, stochastic=True)
+    _, ovl = _serve(cfg, params, overlap=True, stochastic=True)
+    assert ovl == ser
+
+
+def test_overlap_parity_across_chunk_sizes(gdn_model):
+    """The chunk plan (scan chunks + power-of-two tail) is a pure
+    scheduling choice: chunk size never changes the streams."""
+    cfg, params = gdn_model
+    outs = [_serve(cfg, params, overlap=True, prefill_chunk=c)[1]
+            for c in (4, 8, 16)]
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_overlap_ahead_of_slot_admit(gdn_model):
+    """With every slot busy on long budgets, a queued request prefills
+    one chunk dispatch per tick (decode proceeds between chunks) and its
+    first token is emitted while the slots are still decoding (before any
+    slot frees) — the TTFT mechanism the overlap exists for."""
+    cfg, params = gdn_model
+    eng = DecodeEngine(cfg, params, max_slots=2, max_len=64,
+                       decode_block=4, overlap=True, prefill_chunk=8)
+    long = [Request(rid=100 + i, prompt=np.arange(1, 18, dtype=np.int32),
+                    max_new_tokens=30) for i in range(2)]
+    for r in long:
+        eng.submit(r)
+    eng.step()                            # both slots now decoding
+    queued = Request(rid=0, prompt=np.arange(1, 18, dtype=np.int32),
+                     max_new_tokens=4)
+    eng.submit(queued)
+    # 17-token prompt, chunk 8 -> plan [scan(2), admit(1)]: one chunk
+    # dispatch per overlapped tick, token at plan completion
+    eng.step()
+    assert eng._staging is queued         # mid-plan, decode kept ticking
+    assert queued.output == []
+    eng.step()
+    assert not any(r.done for r in long)  # slots still busy
+    assert len(queued.output) == 1        # first token already emitted
+    assert queued.t_first is not None     # TTFT stamped at admit confirm
+    eng.run_until_done()
+    assert queued.done and len(queued.output) == 4
+
+
+# --------------------------------------------------- fused on-device admit
+
+def test_fused_admit_token_matches_sample_np_greedy(gdn_model):
+    """Greedy: the fused on-device first token equals the host mirror
+    (``sample_np`` = argmax) over the same chunked-prefill logits."""
+    cfg, params = gdn_model
+    prompt = np.arange(1, 14, dtype=np.int32)
+    eng = DecodeEngine(cfg, params, max_slots=2, max_len=64, overlap=True)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=1)
+    eng.submit(req)
+    eng.run_until_done()
+    # host mirror: same chunk plan, logits read out, sample_np draw
+    ex = DeviceExecutor(cfg, params, max_slots=1, max_len=64,
+                        decode_block=1, prefill_chunk=16)
+    caches = lm.init_caches(cfg, 1, 64)
+    pos = 0
+    for kind, n in ex.plan_prefill(len(prompt)):
+        size = n * ex.prefill_chunk if kind == "scan" else n
+        chunk = jnp.asarray(prompt[pos:pos + size])
+        pos += size
+        if kind == "scan":
+            caches = lm.prefill_chunk_scan(
+                params, cfg, caches,
+                tokens=chunk.reshape(1, n, ex.prefill_chunk))
+        else:
+            x, caches = lm.prefill_chunk(params, cfg, caches,
+                                         tokens=chunk[None])
+    from repro.models import layers
+    h = layers.rmsnorm_fwd(params["final_norm"], x[:, -1], cfg.norm_eps)
+    logits = np.asarray(lm._logits(params, cfg, h))[0]
+    mirror = sampling.sample_np(np.random.default_rng(0), logits,
+                                temperature=0.0)
+    assert req.output == [mirror]
+
+
+def test_fused_admit_stochastic_matches_device_mirror(gdn_model):
+    """Stochastic: the fused head is ``sampling.sample`` on a 1-row
+    ``admit_row`` state — replaying that pipeline on the chunked-prefill
+    logits reproduces the engine's first token and its advanced key."""
+    cfg, params = gdn_model
+    prompt = np.arange(1, 10, dtype=np.int32)
+    eng = DecodeEngine(cfg, params, max_slots=2, max_len=64, overlap=True,
+                       seed=3)
+    req = Request(rid=7, prompt=prompt, max_new_tokens=1, temperature=0.7,
+                  top_k=12)
+    eng.submit(req)
+    eng.run_until_done()
+    caches = lm.init_caches(cfg, 1, 64)
+    x, caches = lm.prefill_chunk(params, cfg, caches,
+                                 tokens=jnp.asarray(prompt)[None][:, :8])
+    x, caches = lm.prefill_chunk(params, cfg, caches,
+                                 tokens=jnp.asarray(prompt)[None][:, 8:])
+    from repro.models import layers
+    h = layers.rmsnorm_fwd(params["final_norm"], x[:, -1], cfg.norm_eps)
+    logits = lm._logits(params, cfg, h)
+    row = sampling.admit_row(3, 7, 0.7, 12, 1.0, -1, 1)
+    tok, row = sampling.sample(row, logits)
+    assert req.output == [int(tok[0])]
+    assert bool(row["done"][0])           # budget of 1 exhausted on device
+
+
+# ------------------------------------------------------ budget-aware ticks
+
+def test_budget_ticks_parity(gdn_model):
+    """Capping the tick scan length by the max remaining budget (bucketed)
+    drops masked tail steps but never changes the streams."""
+    cfg, params = gdn_model
+    eng_full, full = _serve(cfg, params, overlap=True, budget_ticks=False,
+                            decode_block=8)
+    eng_budget, budget = _serve(cfg, params, overlap=True,
+                                budget_ticks=True, decode_block=8)
+    assert budget == full
+
+
+def test_tick_k_buckets(gdn_model):
+    cfg, params = gdn_model
+    eng = DecodeEngine(cfg, params, max_slots=2, max_len=64,
+                       decode_block=8, budget_ticks=True)
+    for need, want in ((1, 1), (2, 2), (3, 4), (5, 8), (9, 8), (64, 8)):
+        eng.active = {0: Request(rid=0, max_new_tokens=need)}
+        assert eng._tick_k() == want
+    eng.active = {}
+
+
+# ------------------------------------------------------ scheduler policies
+
+def test_submit_rejects_overlong_prompt(gdn_model):
+    """A prompt longer than max_len would wrap the rolling window caches
+    mid-prompt and silently corrupt the context — reject at submit."""
+    cfg, params = gdn_model
+    eng = DecodeEngine(cfg, params, max_slots=2, max_len=32)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(Request(rid=0,
+                           prompt=np.arange(1, 40, dtype=np.int32)))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=1, prompt=np.zeros((0,), np.int32)))
+    with pytest.raises(ValueError, match="needs a prompt"):
+        eng.submit(Request(rid=2))        # neither prompt nor embeds
+    assert not eng.queue                  # nothing was enqueued
+
+
+def test_run_until_done_strict_raises(gdn_model):
+    """Exhausting max_ticks with unfinished work raises (or warns with
+    strict=False) instead of silently returning partial results."""
+    cfg, params = gdn_model
+    eng = DecodeEngine(cfg, params, max_slots=1, max_len=64)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.arange(1, 9, dtype=np.int32),
+                           max_new_tokens=32))
+    with pytest.raises(RuntimeError, match="max_ticks=2 exhausted"):
+        eng.run_until_done(max_ticks=2)
+    with pytest.warns(RuntimeWarning, match="exhausted"):
+        done = eng.run_until_done(max_ticks=1, strict=False)
+    assert len(done) < 3
+    eng.run_until_done()                  # and it can still finish cleanly
+    assert all(r.done for r in eng._all)
+
+
+def test_free_slots_are_a_deque(gdn_model):
+    cfg, params = gdn_model
+    eng = DecodeEngine(cfg, params, max_slots=3, max_len=32)
+    from collections import deque
+    assert isinstance(eng.free, deque)
+
+
+def test_engine_is_scheduler_facade(gdn_model):
+    """engine.DecodeEngine is a thin façade: the lifecycle lives in
+    Scheduler, the device programs in DeviceExecutor."""
+    cfg, params = gdn_model
+    eng = DecodeEngine(cfg, params, max_slots=2, max_len=32)
+    assert isinstance(eng, Scheduler)
+    assert isinstance(eng.executor, DeviceExecutor)
+    assert eng.state_bytes_per_slot == eng.executor.state_bytes_per_slot
+    assert eng.cache_bytes == eng.executor.cache_bytes
+
+
+def test_plan_prefill_bucketing(gdn_model):
+    """Chunk plans decompose into power-of-two scan counts and tail sizes,
+    so the compile cache stays O(log) regardless of prompt lengths."""
+    cfg, params = gdn_model
+    ex = DeviceExecutor(cfg, params, max_slots=1, max_len=256,
+                        decode_block=1, prefill_chunk=16)
+    assert ex.plan_prefill(16) == [("admit", 16)]
+    assert ex.plan_prefill(17) == [("scan", 1), ("admit", 1)]
+    assert ex.plan_prefill(75) == [("scan", 4), ("chunk", 8),
+                                   ("chunk", 2), ("admit", 1)]
+    assert ex.plan_prefill(3) == [("chunk", 2), ("admit", 1)]
+    # scan dispatches are capped so no single program can stall the tick
+    # thread for more than _MAX_SCAN_CHUNKS chunks
+    assert ex.plan_prefill(256) == [("scan", 4)] * 3 + \
+        [("scan", 2), ("scan", 1), ("admit", 16)]
+    sizes = {n for T in range(1, 257)
+             for kind, n in ex.plan_prefill(T)}
+    assert len(sizes) <= 10               # bounded program cache
+    with pytest.raises(ValueError, match="empty prompt"):
+        ex.plan_prefill(0)
