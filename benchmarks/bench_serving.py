@@ -20,9 +20,22 @@ CPU-interpreter scale; only the trend is the claim):
    overlapped mean is strictly better, and asserts the token streams are
    bitwise identical (overlap moves timing, never sampling).
 
+3. **mesh scaling** — (multi-device backends only, e.g.
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU) the
+   engine's slot axis is data-parallel over the mesh: holding the
+   per-device slot count fixed and growing the data axis grows tokens
+   per tick at (ideally) constant tick latency.  The benchmark reports
+   per-tick decode throughput at data ∈ {1, 4} and the speedup.  On
+   real accelerators the speedup is asserted ≥ 1.5× at data=4; on CPU
+   the "devices" are threads carved from the same cores, so the number
+   is *reported as a measurement only* (documented in
+   ``docs/serving.md`` — virtual devices share the host's FLOPs, which
+   is exactly the situation the assertion would be meaningless in).
+
 Each engine first serves a warm-up pass so jit compilation stays out of
 the measurement (``reset_metrics``).  Run with ``--quick`` for the CI
-smoke configuration (one arch, k in {1, 4}, plus the TTFT comparison).
+smoke configuration (one arch, k in {1, 4}, plus the TTFT comparison
+and, when 4+ devices are visible, the mesh-scaling measurement).
 """
 from __future__ import annotations
 
@@ -31,6 +44,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro import configs
+from repro.launch import mesh as mesh_mod
 from repro.models import lm
 from repro.serving.engine import DecodeEngine, Request
 
@@ -133,9 +147,64 @@ def run_ttft_under_load(quick: bool = False):
         f"{overlapped * 1e3:.1f} ms >= {serialized * 1e3:.1f} ms")
 
 
+def _tick_throughput(cfg, params, *, data: int, slots_per_shard: int,
+                     max_new: int, trials: int) -> float:
+    """Decode-only tokens/s of one saturated engine at data-axis size
+    ``data`` (slot count = data * slots_per_shard, all slots busy)."""
+    slots = data * slots_per_shard
+    mesh = mesh_mod.make_serving_mesh(data, 1) if data > 1 else None
+    eng = DecodeEngine(cfg, params, max_slots=slots, max_len=64,
+                       decode_block=8, mesh=mesh)
+    best = 0.0
+    _serve(eng, slots, 9)                      # warm-up: compile + admit
+    for _ in range(trials):
+        eng.reset_metrics()
+        _serve(eng, slots, max_new)            # every slot decodes
+        m = eng.metrics()
+        best = max(best, m["decoded_tokens"] / max(m["decode_s"], 1e-12))
+    return best
+
+
+def run_mesh_scaling(quick: bool = False):
+    """Per-tick decode throughput vs the data-axis size (slot-axis DP).
+
+    Needs >= 4 visible devices; under
+    ``--xla_force_host_platform_device_count`` the devices are host
+    threads, so the measured speedup is emitted but only *asserted* on
+    real multi-device backends (see module docstring)."""
+    if jax.device_count() < 4:
+        emit("serving/mesh_scaling/skipped", 0.0,
+             f"device_count={jax.device_count()}<4;set XLA_FLAGS="
+             f"--xla_force_host_platform_device_count=8 for the CPU "
+             f"smoke measurement")
+        return
+    arch = "qwen3-next-gdn"
+    cfg = configs.get_arch(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    trials = 2 if quick else 3
+    max_new = 17 if quick else 33
+    tput = {d: _tick_throughput(cfg, params, data=d, slots_per_shard=2,
+                                max_new=max_new, trials=trials)
+            for d in (1, 4)}
+    for d, t in tput.items():
+        emit(f"serving/{arch}/mesh_data{d}", t,
+             f"decode_tokens_per_s;slots={2 * d};slots_per_shard=2;"
+             f"decode_block=8;reduced_cpu_virtual_devices")
+    speedup = tput[4] / max(tput[1], 1e-12)
+    cpu_virtual = jax.default_backend() == "cpu"
+    emit(f"serving/{arch}/mesh_scaling_speedup", speedup,
+         f"data4_over_data1;asserted={not cpu_virtual};"
+         f"{'cpu_virtual_devices_share_host_flops' if cpu_virtual else 'real_devices'}")
+    if not cpu_virtual:
+        assert speedup >= 1.5, (
+            f"slot-axis DP must scale decode throughput on real devices: "
+            f"data=4 gave {speedup:.2f}x over data=1 (< 1.5x)")
+
+
 def run(quick: bool = False):
     run_block_sweep(quick=quick)
     run_ttft_under_load(quick=quick)
+    run_mesh_scaling(quick=quick)
 
 
 if __name__ == "__main__":
@@ -143,6 +212,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke config: one arch, k in {1, 4}, plus the "
-                         "overlap-on/off TTFT-under-load comparison")
+                         "overlap-on/off TTFT-under-load comparison and "
+                         "(4+ devices) the mesh-scaling measurement")
     args = ap.parse_args()
     run(quick=args.quick)

@@ -1,7 +1,8 @@
 """Architecture registry: 10 assigned archs + the paper's own (qwen3-next GDN)."""
 from __future__ import annotations
 
-from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_applicable
+from repro.configs.base import (ArchConfig, ServingTopology, ShapeConfig,
+                                SHAPES, shape_applicable)
 from repro.configs.llava_next_34b import CONFIG as llava_next_34b
 from repro.configs.minicpm_2b import CONFIG as minicpm_2b
 from repro.configs.minitron_8b import CONFIG as minitron_8b
@@ -32,5 +33,5 @@ def get_arch(name: str) -> ArchConfig:
     return ARCHS[key]
 
 
-__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ARCHS", "ASSIGNED",
-           "get_arch", "shape_applicable"]
+__all__ = ["ArchConfig", "ServingTopology", "ShapeConfig", "SHAPES",
+           "ARCHS", "ASSIGNED", "get_arch", "shape_applicable"]

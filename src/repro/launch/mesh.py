@@ -3,19 +3,75 @@
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — required because the dry-run must set
 XLA_FLAGS before the first jax initialization.
+
+Every constructor validates the requested shape against
+``jax.device_count()`` up front (``validate_mesh_shape``) — a bad shape
+used to surface as an inscrutable partitioning error deep inside the
+first jit; now it raises a one-line ValueError before any program is
+traced.
 """
 from __future__ import annotations
 
+import math
+from typing import Optional, Sequence, Tuple
+
 import jax
+
+
+def validate_mesh_shape(shape: Sequence[int], axes: Sequence[str],
+                        *, device_count: Optional[int] = None
+                        ) -> Tuple[int, ...]:
+    """Check a requested mesh topology before any jit sees it.
+
+    Raises ``ValueError`` with an actionable message when the axis lists
+    mismatch, an axis size is not a positive integer, or the shape needs
+    more devices than the backend exposes (the common failure: forgetting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU).
+    Returns the shape as a tuple on success.
+    """
+    shape = tuple(shape)
+    axes = tuple(axes)
+    if len(shape) != len(axes):
+        raise ValueError(
+            f"mesh shape {shape} has {len(shape)} axes but names {axes} "
+            f"have {len(axes)}")
+    for name, size in zip(axes, shape):
+        if not isinstance(size, int) or isinstance(size, bool) or size < 1:
+            raise ValueError(
+                f"mesh axis {name!r} must be a positive int, got {size!r}")
+    if len(set(axes)) != len(axes):
+        raise ValueError(f"duplicate mesh axis names in {axes}")
+    need = math.prod(shape)
+    have = jax.device_count() if device_count is None else device_count
+    if need > have:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {need} devices but only "
+            f"{have} are visible — shrink the mesh, or (CPU smoke runs) "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"before the first jax import")
+    return shape
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    validate_mesh_shape(shape, axes)
     return jax.make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over locally available devices (tests / examples)."""
+    validate_mesh_shape((data, model), ("data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(data: int = 1, model: int = 1):
+    """Serving-engine mesh: slot-axis DP x head/context TP.
+
+    Uses the first ``data * model`` visible devices (a serving host may
+    dedicate the remainder to a second engine behind the router).
+    """
+    validate_mesh_shape((data, model), ("data", "model"))
+    devs = jax.devices()[: data * model]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devs)

@@ -7,11 +7,21 @@
 ``--decode-block k`` fuses k decode+sample steps per engine tick on device
 (one host sync per k tokens); sampling runs on device with per-slot
 temperature / top-k / top-p.  Prefill is chunked (``--prefill-chunk``) and
-by default overlapped: queued requests stream into the staging buffers at
-tick boundaries while resident slots decode, with the first token sampled
-on device by the fused admit head (``--serialized`` restores the
-prefill-behind-a-free-slot baseline; token streams are bitwise identical).
-See docs/serving.md.
+by default overlapped: queued requests stream into a ring of
+``--staging-depth`` staging buffers at tick boundaries while resident
+slots decode, with the first token sampled on device by the fused admit
+head (``--serialized`` restores the prefill-behind-a-free-slot baseline;
+token streams are bitwise identical).
+
+``--mesh DATA,MODEL`` runs each engine mesh-sharded: the slot axis is
+data-parallel over DATA devices (``--slots`` is padded up to a multiple)
+and the recurrent-state heads / KV context are sharded over MODEL devices
+(the paper's head-parallelism axis scaled out); every tick stays one SPMD
+program.  ``--engines N`` fronts N such engines with a host-side router
+(``--router-policy``), each engine on its own slice of the visible
+devices when enough exist.  On CPU, prefix
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to smoke-test a
+topology.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -22,8 +32,47 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.configs.base import ServingTopology
+from repro.launch import mesh as mesh_mod
 from repro.models import lm
-from repro.serving.engine import DecodeEngine, Request
+from repro.serving.engine import DecodeEngine, Request, Router
+
+
+def build_engines(cfg, params, args, topo: ServingTopology):
+    """One engine per ``--engines``, each on its own consecutive device
+    slice when the backend has enough devices (otherwise they share the
+    first slice — correct, just not physically parallel)."""
+    slots = topo.pad_slots(args.slots)
+    if slots != args.slots:
+        print(f"slots padded {args.slots} -> {slots} "
+              f"(multiple of data={topo.data})")
+    engines = []
+    dm = topo.devices
+    devs = jax.devices()
+    shared_note = False
+    for i in range(args.engines):
+        lo = i * dm
+        if lo + dm <= len(devs):
+            sl = devs[lo:lo + dm]
+        else:
+            sl = devs[:dm]
+            if not shared_note:
+                shared_note = True
+                print(f"note: engines {i}..{args.engines - 1} share "
+                      f"devices 0..{dm - 1} with engine 0 (only "
+                      f"{len(devs)} visible) — correct, but they "
+                      f"time-slice the same hardware")
+        mesh_mod.validate_mesh_shape(topo.shape, topo.axes,
+                                     device_count=len(sl))
+        mesh = (None if dm == 1 and args.engines == 1 else
+                jax.make_mesh(topo.shape, topo.axes, devices=sl))
+        engines.append(DecodeEngine(
+            cfg, params, max_slots=slots, max_len=args.max_len,
+            seed=args.seed, decode_block=args.decode_block,
+            overlap=args.overlap, prefill_chunk=args.prefill_chunk,
+            budget_ticks=args.budget_ticks, mesh=mesh,
+            staging_depth=topo.staging_depth))
+    return engines, slots
 
 
 def main():
@@ -38,6 +87,17 @@ def main():
                          "(host syncs once per block)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt chunk size for staged prefill")
+    ap.add_argument("--mesh", default="1,1",
+                    help="engine mesh topology DATA,MODEL (slot axis on "
+                         "data, state heads / KV context on model); "
+                         "slots are padded to a multiple of DATA")
+    ap.add_argument("--staging-depth", type=int, default=2,
+                    help="staging-buffer ring size: ahead-of-slot "
+                         "prefills outstanding under saturation")
+    ap.add_argument("--engines", type=int, default=1,
+                    help="number of per-mesh engines behind the router")
+    ap.add_argument("--router-policy", default="least_loaded",
+                    choices=("least_loaded", "round_robin"))
     ap.add_argument("--serialized", dest="overlap", action="store_false",
                     default=True,
                     help="disable prefill/decode overlap (admit prefills "
@@ -56,39 +116,43 @@ def main():
     ap.add_argument("--full", dest="reduced", action="store_false")
     args = ap.parse_args()
 
+    topo = ServingTopology.parse(args.mesh,
+                                 staging_depth=args.staging_depth)
     cfg = configs.get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
-    engine = DecodeEngine(cfg, params, max_slots=args.slots,
-                          max_len=args.max_len, seed=args.seed,
-                          decode_block=args.decode_block,
-                          overlap=args.overlap,
-                          prefill_chunk=args.prefill_chunk,
-                          budget_ticks=args.budget_ticks)
+    engines, slots = build_engines(cfg, params, args, topo)
+    router = Router(engines, policy=args.router_policy)
+    eng = engines[0]
     # per-slot budgets straight from the mixers' declarative cache specs
-    print(f"engine: {args.slots} slots x "
-          f"(persistent state {engine.state_bytes_per_slot / 2**10:.1f} KiB"
-          f" + window/KV {engine.window_bytes_per_slot / 2**10:.1f} KiB)"
-          f" = {engine.cache_bytes / 2**20:.2f} MiB slot buffers, "
+    print(f"topology: {args.engines} engine(s) x mesh "
+          f"data={topo.data},model={topo.model} "
+          f"(staging ring depth {topo.staging_depth}, "
+          f"router={args.router_policy})")
+    print(f"engine: {slots} slots x "
+          f"(persistent state {eng.state_bytes_per_slot / 2**10:.1f} KiB"
+          f" + window/KV {eng.window_bytes_per_slot / 2**10:.1f} KiB)"
+          f" = {eng.cache_bytes / 2**20:.2f} MiB slot buffers, "
           f"decode_block={args.decode_block}, "
           f"prefill={'overlapped' if args.overlap else 'serialized'} "
-          f"chunks of {engine.prefill_chunk}")
+          f"chunks of {eng.prefill_chunk}")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 17),
                               dtype=np.int32)
-        engine.submit(Request(rid=i, prompt=prompt,
+        router.submit(Request(rid=i, prompt=prompt,
                               max_new_tokens=args.max_new,
                               temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p))
     t0 = time.perf_counter()
-    done = engine.run_until_done()
+    done = router.run_until_done()
     dt = time.perf_counter() - t0
-    m = engine.metrics()
+    m = router.metrics()
     print(f"served {m['requests']} requests, {m['tokens']} tokens in "
           f"{dt:.2f}s ({m['tokens'] / dt:.1f} tok/s) over "
-          f"{m['ticks']} engine ticks")
+          f"{m['ticks']} engine ticks "
+          f"(placed {m['placed']}, migrated {m['migrated']})")
     print(f"  decode: {m['decode_us_per_token']:.0f} us/token "
           f"({m['decoded_tokens']} tokens in {m['decode_s']:.2f}s, "
           f"one host sync per {args.decode_block} tokens, "

@@ -217,13 +217,33 @@ def attn_prefill_chunk(p, x, cache: KVCache, *, rope_theta=10000.0,
     causal = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]
     s_chunk = jnp.where(causal[None, None, None, :, :], s_chunk, -1e30)
 
-    s = jnp.concatenate([s_cache, s_chunk], axis=-1)           # (B,Hkv,G,C,size+C)
-    pmax = jnp.max(s, axis=-1, keepdims=True)
-    p_att = jnp.exp(s - pmax)
-    p_att = p_att / jnp.maximum(jnp.sum(p_att, -1, keepdims=True), 1e-30)
-    vals = jnp.concatenate([cache.v, vc.astype(cache.v.dtype)], axis=2)
-    o = jnp.einsum("bhgcs,bhsd->bhgcd", p_att.astype(vals.dtype), vals,
-                   preferred_element_type=jnp.float32)
+    # --- two-part online-softmax combine ------------------------------
+    # The cache and chunk score blocks are softmaxed separately and merged
+    # flash-style instead of concatenated: under a mesh the cache's context
+    # dim is sharded on "model" (split-K decode) while the in-chunk scores
+    # are replicated, and a concatenate along that mixed-sharded axis is
+    # exactly the kind of resharding GSPMD handles worst (the -1e30 mask
+    # values get mangled through the halo padding); the per-block
+    # max/sum/weighted-sum reductions below partition cleanly.
+    m_cache = jnp.max(s_cache, axis=-1)                        # (B,Hkv,G,C)
+    e_cache = jnp.exp(s_cache - m_cache[..., None])
+    l_cache = jnp.sum(e_cache, axis=-1)
+    o_cache = jnp.einsum("bhgct,bhtd->bhgcd",
+                         e_cache.astype(cache.v.dtype), cache.v,
+                         preferred_element_type=jnp.float32)
+    m_chunk = jnp.max(s_chunk, axis=-1)
+    e_chunk = jnp.exp(s_chunk - m_chunk[..., None])
+    l_chunk = jnp.sum(e_chunk, axis=-1)
+    o_chunk = jnp.einsum("bhgcj,bhjd->bhgcd", e_chunk.astype(vc.dtype), vc,
+                         preferred_element_type=jnp.float32)
+    m = jnp.maximum(m_cache, m_chunk)
+    # a fully-masked block has m_* = -1e30 => weight exp(-1e30 - m) == 0,
+    # so its (garbage) unnormalized sums never contribute
+    w_cache = jnp.exp(m_cache - m)
+    w_chunk = jnp.exp(m_chunk - m)
+    l = w_cache * l_cache + w_chunk * l_chunk
+    o = (w_cache[..., None] * o_cache + w_chunk[..., None] * o_chunk) \
+        / jnp.maximum(l, 1e-30)[..., None]
     o = o.transpose(0, 3, 1, 2, 4).reshape(B, C, Hq, hd).astype(x.dtype)
     o = _apply_head_mask(o, head_mask)
     out = jnp.einsum("bthk,hkd->btd", o, p["wo"]).astype(x.dtype)

@@ -250,8 +250,56 @@ def cache_specs(cfg: ArchConfig, mesh: Mesh, caches_shape, batch: int):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+# ---------------------------------------------------------------- serving
+
+def slot_specs(cfg: ArchConfig, mesh: Mesh, caches_shape, max_slots: int):
+    """Serving slot-buffer shardings: the engine's cache pytree with the
+    *slot* axis (dim 1, after the layer-stack repeats) on "data" and the
+    paper's head parallelism scaled out on "model" — GDN/SSM state heads
+    and the attention KV context dim, exactly the decode-cache rules
+    above (``cache_specs`` with batch = slots)."""
+    return cache_specs(cfg, mesh, caches_shape, max_slots)
+
+
+def staging_specs(slot_spec_tree):
+    """Staging-buffer shardings derived from the slot specs: the staging
+    pytree is the same cache layout at slot-count 1, so the slot ("data")
+    annotation is cleared while every other axis (state heads / KV context
+    on "model") keeps the *same* placement — the slot scatter then moves
+    data only along the slot axis, never resharding heads."""
+    def drop_slot(spec: P) -> P:
+        axes = list(spec)
+        if len(axes) > 1:
+            axes[1] = None
+        return P(*axes)
+    return jax.tree.map(drop_slot, slot_spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sampler_specs(mesh: Mesh, sampler_shape, max_slots: int):
+    """Per-slot sampler arrays ((S,) / (S, 2) leaves): slot axis on the DP
+    axes when it divides, replicated otherwise (never re-placed — a PRNG
+    key's lane dim must not be split across devices)."""
+    dp = dp_axes(mesh)
+    dp_ok = max_slots % axis_size(mesh, dp) == 0
+    return jax.tree.map(
+        lambda v: P(dp if dp_ok else None,
+                    *([None] * (len(v.shape) - 1))), sampler_shape)
+
+
+def token_slot_spec(mesh: Mesh, max_slots: int) -> P:
+    """The (S,) last-token vector: slot axis on DP when it divides."""
+    dp = dp_axes(mesh)
+    return P(dp) if max_slots % axis_size(mesh, dp) == 0 else P(None)
+
+
 # ---------------------------------------------------------------- apply
 
 def make_shardings(mesh: Mesh, specs):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh, tree):
+    """Fully-replicated NamedSharding pytree matching ``tree``'s leaves."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -5,26 +5,41 @@ The engine used to be one module; it is now two layers (see
 ``docs/serving.md``):
 
   * ``repro.serving.scheduler.Scheduler`` — host side: queue, slot
-    assignment, request lifecycle, overlapped chunked-prefill staging,
-    budget-aware tick policy, metrics.
+    assignment, request lifecycle, overlapped chunked-prefill staging
+    (a ring of ``staging_depth`` buffers), budget-aware tick policy,
+    metrics.
   * ``repro.serving.executor.DeviceExecutor`` — device side: the donated
     slot/staging buffers and every jitted program (fused decode+sample
     scan, chunked prefill with the fused on-device admit sample, slot
-    scatter).
+    scatter).  With ``mesh=`` set, every buffer is allocated with a
+    ``NamedSharding`` (slot axis on "data", state heads / KV context on
+    "model") and every program is compiled with explicit in/out
+    shardings — one SPMD program per tick over the whole mesh.
+
+Above the engine, ``repro.serving.router.Router`` fronts one-or-more
+per-mesh engines (placement, rebalance/drain, aggregated metrics).
 
 ``DecodeEngine`` is the backwards-compatible entry point: the PR-2 API
 (``submit`` / ``step`` / ``run_until_done`` / ``metrics``) is unchanged,
-with new keyword knobs — ``overlap`` (chunked prefill staged while
-resident slots decode; default on), ``prefill_chunk`` (chunk size) and
-``budget_ticks`` (budget-aware tick length; default on).  ``overlap`` and
-``budget_ticks`` move timing only: they run the same programs over the
-same chunk plan, so token streams are bitwise identical across those
-settings.  ``prefill_chunk`` changes the plan and hence float reduction
-order — greedy streams are pinned identical by the test suite, but
-temperature>0 draws may differ across chunk sizes.
+with keyword knobs — ``overlap`` (chunked prefill staged while resident
+slots decode; default on), ``prefill_chunk`` (chunk size),
+``budget_ticks`` (budget-aware tick length; default on), ``mesh`` (a
+``("data", "model")`` device mesh; default single-device) and
+``staging_depth`` (ahead-of-slot prefills outstanding under saturation;
+default 2).  ``overlap``, ``budget_ticks``, ``staging_depth`` and the
+*data axis* of the mesh move timing/placement only: they run the same
+programs over the same chunk plans, so token streams are bitwise
+identical across those settings.  ``prefill_chunk`` changes the plan and
+hence float reduction order, and the mesh's *model* axis splits head /
+context reductions across devices (psum partial ordering) — greedy
+streams are pinned identical by the test suite for chunk sizes, but
+model-sharded engines may legitimately diverge in low-probability tokens
+exactly as any tensor-parallel serving stack does (see
+``docs/serving.md``).
 """
 from __future__ import annotations
 
+from repro.serving.router import Router
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -32,4 +47,4 @@ class DecodeEngine(Scheduler):
     """Backwards-compatible façade over ``Scheduler`` + ``DeviceExecutor``."""
 
 
-__all__ = ["DecodeEngine", "Request"]
+__all__ = ["DecodeEngine", "Request", "Router"]

@@ -8,36 +8,52 @@ touches an accelerator buffer lives here; everything that touches a
     leading slot axis, the per-slot sampler arrays and the per-slot last
     tokens, all donated through every tick so XLA updates them in place
     (the TPU analogue of the paper's BRAM-resident state);
-  * the **staging buffers** — a single-sequence cache pytree plus a 1-row
-    sampler state that chunked prefill streams into while the resident
-    slots keep decoding, scattered into a real slot only once staging
-    completes (the serving-layer version of the paper's
-    prepare/compute/store overlap);
+  * the **staging ring** — ``staging_depth`` single-sequence cache pytrees
+    plus 1-row sampler states that chunked prefill streams into while the
+    resident slots keep decoding, each scattered into a real slot only
+    once its staging completes (the serving-layer version of the paper's
+    prepare/compute/store overlap; a ring deeper than 1 lets several
+    queued requests prefill ahead under saturation);
   * the **programs** — one jitted, donated program per static shape:
     - ``decode(k)``: the ``lm.decode_steps`` fused decode+sample scan, one
       program per bucketed tick length k (budget-aware ticks pick the
       smallest bucket covering the max remaining per-slot budget);
     - ``stage_chunk_scan`` / ``stage_chunk`` / ``stage_admit``: chunked
-      prefill into the staging cache — full chunks of ``prefill_chunk``
+      prefill into a staging cache — full chunks of ``prefill_chunk``
       tokens run m-at-a-time under one ``lax.scan`` (one program per
       power-of-two m), the ragged tail is decomposed into power-of-two
       sub-chunks (one program per size), and the final sub-chunk fuses the
       first-token draw on device (``lm.prefill_sample``), so admit never
-      ships logits to the host;
-    - ``scatter(slot)``: one donated ``dynamic_update_slice`` over the
-      whole staging pytree + sampler row + first token into slot ``slot``.
+      ships logits to the host; ring buffers share programs (same shapes);
+    - ``scatter(slot, buf)``: one donated ``dynamic_update_slice`` over
+      the whole staging pytree + sampler row + first token into ``slot``.
 
   Every program is compiled lazily on first use and cached by its static
   shape, so the compile-cache size is bounded by the bucketing: O(log)
   distinct chunk/scan sizes and O(log) tick lengths.
+
+**Mesh sharding.**  With ``mesh`` set (a ``("data", "model")`` device
+mesh, see ``launch/mesh.py``), every buffer above is allocated with a
+``NamedSharding`` derived from the existing sharding rules in
+``parallel/sharding.py``: the slot axis on "data" (slot-axis data
+parallelism), GDN/SSM state heads and the attention KV context dim on
+"model" (the paper's 2→16 head-parallelism design axis scaled out over
+devices), params TP-sharded by ``params_specs``, sampler rows and last
+tokens slot-sharded on "data".  Every program is compiled with explicit
+``in_shardings``/``out_shardings`` under that mesh, so the whole k-step
+tick stays ONE SPMD program — there is no per-token cross-device sync
+beyond the collectives GSPMD inserts inside it, and donated buffers keep
+their placement across ticks.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import lm
@@ -78,12 +94,17 @@ class DeviceExecutor:
     """Owns the device buffers and jitted programs of one decode engine."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int,
-                 max_len: int, decode_block: int, prefill_chunk: int = 16):
+                 max_len: int, decode_block: int, prefill_chunk: int = 16,
+                 mesh: Optional[Mesh] = None, staging_depth: int = 2):
+        if staging_depth < 1:
+            raise ValueError(
+                f"staging_depth must be >= 1, got {staging_depth}")
         self.cfg = cfg
-        self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.decode_block = decode_block
+        self.mesh = mesh
+        self.staging_depth = staging_depth
         # chunks scatter into rolling KV buffers, whose size is
         # min(window, max_len) — one chunk must not wrap a buffer
         limit = min(max_len, cfg.window) if cfg.window else max_len
@@ -92,22 +113,31 @@ class DeviceExecutor:
         # spec-driven slot buffers: shapes, dtypes and byte budgets all
         # come from the mixers' declarative cache specs
         self.spec = lm.cache_specs(cfg, max_slots, max_len)
-        self.caches = self.spec.zeros()
         slot_spec = lm.cache_specs(cfg, 1, max_len)
         self.state_bytes_per_slot = slot_spec.state_bytes
         self.window_bytes_per_slot = slot_spec.window_bytes
         self.cache_bytes = self.spec.nbytes
-        self.tokens = jnp.zeros((max_slots,), jnp.int32)
-        self.sampler = sampling.init_state(max_slots)
 
-        # staging buffers (prefill overlap target); the sampler row is
+        self._build_shardings(params)
+        self.params = (params if mesh is None else
+                       jax.device_put(params, self._sh_params))
+        self.caches = self._zeros(self.spec, self._sh_caches)
+        self.tokens = self._put(jnp.zeros((max_slots,), jnp.int32),
+                                self._sh_tokens)
+        self.sampler = self._put(sampling.init_state(max_slots),
+                                 self._sh_sampler)
+
+        # staging ring (prefill overlap targets); the sampler rows are
         # produced by the fused admit program, not materialized up front
-        self._staging_zeros = jax.jit(lambda: lm.init_caches(cfg, 1, max_len))
-        self.staging = self._staging_zeros()
-        self._staging_clean = True
-        self._staging_args = None
-        self.staging_row = None
-        self.staging_tok: Optional[jax.Array] = None
+        self._staging_zeros = self._jit(
+            lambda: lm.init_caches(cfg, 1, max_len),
+            out_sh=self._sh_staging)
+        self.staging: List[Any] = [self._staging_zeros()
+                                   for _ in range(staging_depth)]
+        self._staging_clean = [True] * staging_depth
+        self._staging_args: List[Optional[tuple]] = [None] * staging_depth
+        self.staging_row: List[Any] = [None] * staging_depth
+        self.staging_tok: List[Optional[jax.Array]] = [None] * staging_depth
 
         # lazily-built program caches, keyed by static shape
         self._decode_p: Dict[int, object] = {}
@@ -116,7 +146,73 @@ class DeviceExecutor:
         self._admit_p: Dict[Tuple[int, bool], object] = {}
         # donate only the slot buffers: the staging pytree's (repeats, 1,
         # ...) leaves have no same-shape output to alias (XLA would warn)
-        self._scatter_p = jax.jit(_scatter_fn, donate_argnums=(0, 1, 2))
+        self._scatter_p = self._jit(
+            _scatter_fn, donate=(0, 1, 2),
+            in_sh=(self._sh_caches, self._sh_sampler, self._sh_tokens,
+                   self._sh_staging, self._sh_row, self._sh_rep,
+                   self._sh_rep),
+            out_sh=(self._sh_caches, self._sh_sampler, self._sh_tokens))
+
+    # --------------------------------------------------------- shardings
+    def _build_shardings(self, params):
+        """Derive every buffer's NamedSharding from the rules in
+        ``parallel/sharding.py`` (None placeholders when no mesh)."""
+        if self.mesh is None:
+            (self._sh_params, self._sh_caches, self._sh_staging,
+             self._sh_sampler, self._sh_tokens, self._sh_row,
+             self._sh_rep, self._sh_toks2d) = (None,) * 8
+            return
+        from repro.parallel import sharding as rules
+        mesh = self.mesh
+        if self.max_slots % rules.axis_size(mesh, rules.dp_axes(mesh)):
+            warnings.warn(
+                f"max_slots={self.max_slots} does not divide the data axis "
+                f"({rules.axis_size(mesh, rules.dp_axes(mesh))}); the slot "
+                f"axis cannot shard evenly (fit_spec will replicate it or "
+                f"re-place 'data' on a state dim, losing the bitwise "
+                f"stream guarantee) — pad slots with "
+                f"ServingTopology.pad_slots", RuntimeWarning)
+        cache_ps = rules.slot_specs(self.cfg, mesh, self.spec.shape_dtype(),
+                                    self.max_slots)
+        self._sh_caches = rules.make_shardings(mesh, cache_ps)
+        self._sh_staging = rules.make_shardings(
+            mesh, rules.staging_specs(cache_ps))
+        self._sh_params = rules.make_shardings(
+            mesh, rules.params_specs(self.cfg, params, False, mesh))
+        samp = jax.eval_shape(lambda: sampling.init_state(self.max_slots))
+        self._sh_sampler = rules.make_shardings(
+            mesh, rules.sampler_specs(mesh, samp, self.max_slots))
+        tok_spec = rules.token_slot_spec(mesh, self.max_slots)
+        self._sh_tokens = NamedSharding(mesh, tok_spec)
+        self._sh_row = rules.replicated(mesh, samp)
+        self._sh_rep = NamedSharding(mesh, P())
+        self._sh_toks2d = NamedSharding(mesh, P(None, *tok_spec))
+
+    def _jit(self, fn, *, donate=(), in_sh=None, out_sh=None):
+        """jit with explicit in/out shardings when running under a mesh
+        (every program is one SPMD program over the whole mesh), plain
+        jit otherwise."""
+        if self.mesh is None:
+            return jax.jit(fn, donate_argnums=donate)
+        kw = {}
+        if in_sh is not None:
+            kw["in_shardings"] = in_sh
+        if out_sh is not None:
+            kw["out_shardings"] = out_sh
+        return jax.jit(fn, donate_argnums=donate, **kw)
+
+    def _zeros(self, spec, shardings):
+        if self.mesh is None:
+            return spec.zeros()
+        return jax.jit(spec.zeros, out_shardings=shardings)()
+
+    def _put(self, tree, shardings):
+        return tree if self.mesh is None else jax.device_put(tree,
+                                                             shardings)
+
+    def _rep_sh(self, n: int):
+        """in_shardings entry for n replicated (scalar/host) args."""
+        return (self._sh_rep,) * n
 
     # ------------------------------------------------------------- plans
     def plan_prefill(self, length: int) -> List[PlanStep]:
@@ -150,22 +246,24 @@ class DeviceExecutor:
         return steps
 
     # ----------------------------------------------------------- staging
-    def stage_begin(self, *, seed: int, rid: int, temperature: float,
-                    top_k: int, top_p: float, eos_id, budget: int):
-        """Reset the staging cache and record the request's sampling
-        parameters.  The 1-row sampler state itself is built *inside* the
-        fused admit program (key folded from (seed, rid) there, so the
-        draw stream is independent of slot placement and tick length) —
-        building it host-side would cost ~17 tiny dispatches per admit."""
-        if not self._staging_clean:
-            self.staging = self._staging_zeros()
-        self._staging_clean = False
-        self._staging_args = (
+    def stage_begin(self, buf: int, *, seed: int, rid: int,
+                    temperature: float, top_k: int, top_p: float,
+                    eos_id, budget: int):
+        """Reset ring buffer ``buf``'s staging cache and record the
+        request's sampling parameters.  The 1-row sampler state itself is
+        built *inside* the fused admit program (key folded from
+        (seed, rid) there, so the draw stream is independent of slot
+        placement, staging buffer and tick length) — building it
+        host-side would cost ~17 tiny dispatches per admit."""
+        if not self._staging_clean[buf]:
+            self.staging[buf] = self._staging_zeros()
+        self._staging_clean[buf] = False
+        self._staging_args[buf] = (
             np.int32(seed), np.int32(rid), np.float32(temperature),
             np.int32(top_k), np.float32(top_p),
             np.int32(-1 if eos_id is None else eos_id), np.int32(budget))
-        self.staging_row = None
-        self.staging_tok = None
+        self.staging_row[buf] = None
+        self.staging_tok[buf] = None
 
     def _as_chunk(self, chunk, lead_shape):
         """Flat prompt slice -> device chunk.  (n,) int tokens or (n, d)
@@ -177,36 +275,41 @@ class DeviceExecutor:
             return x.reshape(*lead_shape, x.shape[-1]), True
         return jnp.asarray(chunk, jnp.int32).reshape(lead_shape), False
 
-    def stage_chunk_scan(self, chunks):
-        """Advance staging by m full chunks in one dispatch.  chunks: flat
-        (m * C,) tokens or (m * C, d) embeds."""
+    def stage_chunk_scan(self, buf: int, chunks):
+        """Advance ring buffer ``buf`` by m full chunks in one dispatch.
+        chunks: flat (m * C,) tokens or (m * C, d) embeds."""
         m = len(chunks) // self.prefill_chunk
         x, is_embeds = self._as_chunk(chunks, (1, m, self.prefill_chunk))
         prog = self._scan_p.get((m, is_embeds))
         if prog is None:
             kw = "embeds" if is_embeds else "tokens"
-            prog = jax.jit(
+            prog = self._jit(
                 lambda p, t, c, kw=kw: lm.prefill_chunk_scan(
                     p, self.cfg, c, **{kw: t}),
-                donate_argnums=(2,))
+                donate=(2,),
+                in_sh=(self._sh_params, self._sh_rep, self._sh_staging),
+                out_sh=self._sh_staging)
             self._scan_p[(m, is_embeds)] = prog
-        self.staging = prog(self.params, x, self.staging)
+        self.staging[buf] = prog(self.params, x, self.staging[buf])
 
-    def stage_chunk(self, chunk):
-        """Advance staging by one interior tail sub-chunk (no logits)."""
+    def stage_chunk(self, buf: int, chunk):
+        """Advance ring buffer ``buf`` by one interior tail sub-chunk
+        (no logits)."""
         s = len(chunk)
         x, is_embeds = self._as_chunk(chunk, (1, s))
         prog = self._chunk_p.get((s, is_embeds))
         if prog is None:
             kw = "embeds" if is_embeds else "tokens"
-            prog = jax.jit(
+            prog = self._jit(
                 lambda p, t, c, kw=kw: lm.prefill_chunk(
                     p, self.cfg, c, **{kw: t})[1],
-                donate_argnums=(2,))
+                donate=(2,),
+                in_sh=(self._sh_params, self._sh_rep, self._sh_staging),
+                out_sh=self._sh_staging)
             self._chunk_p[(s, is_embeds)] = prog
-        self.staging = prog(self.params, x, self.staging)
+        self.staging[buf] = prog(self.params, x, self.staging[buf])
 
-    def stage_admit(self, chunk) -> jax.Array:
+    def stage_admit(self, buf: int, chunk) -> jax.Array:
         """Final sub-chunk + fused on-device first-token draw: one dispatch
         builds the request's sampler row (``sampling.admit_row``), prefills
         the chunk, samples the first token and advances the row (key split,
@@ -226,22 +329,29 @@ class DeviceExecutor:
                 return lm.prefill_sample(p, self.cfg, c, row,
                                          sampling.sample, **{kw: t})
 
-            prog = jax.jit(_admit, donate_argnums=(2,))
+            prog = self._jit(
+                _admit, donate=(2,),
+                in_sh=((self._sh_params, self._sh_rep, self._sh_staging)
+                       + self._rep_sh(7) if self.mesh is not None else None),
+                out_sh=((self._sh_rep, self._sh_row, self._sh_staging)
+                        if self.mesh is not None else None))
             self._admit_p[(s, is_embeds)] = prog
-        self.staging_tok, self.staging_row, self.staging = prog(
-            self.params, x, self.staging, *self._staging_args)
-        return self.staging_tok
+        self.staging_tok[buf], self.staging_row[buf], self.staging[buf] = \
+            prog(self.params, x, self.staging[buf],
+                 *self._staging_args[buf])
+        return self.staging_tok[buf]
 
-    def scatter(self, slot: int):
-        """Scatter the completed staging cache + sampler row + first token
-        into slot ``slot`` (one donated dispatch), then reset staging."""
+    def scatter(self, slot: int, buf: int):
+        """Scatter ring buffer ``buf``'s completed staging cache + sampler
+        row + first token into slot ``slot`` (one donated dispatch), then
+        reset that ring buffer."""
         self.caches, self.sampler, self.tokens = self._scatter_p(
-            self.caches, self.sampler, self.tokens, self.staging,
-            self.staging_row, self.staging_tok, jnp.int32(slot))
-        self.staging = self._staging_zeros()
-        self._staging_clean = True
-        self.staging_row = None
-        self.staging_tok = None
+            self.caches, self.sampler, self.tokens, self.staging[buf],
+            self.staging_row[buf], self.staging_tok[buf], jnp.int32(slot))
+        self.staging[buf] = self._staging_zeros()
+        self._staging_clean[buf] = True
+        self.staging_row[buf] = None
+        self.staging_tok[buf] = None
 
     # ------------------------------------------------------------- ticks
     def decode(self, k: int):
@@ -249,11 +359,16 @@ class DeviceExecutor:
         host sync reads the (k, slots) token/validity arrays."""
         prog = self._decode_p.get(k)
         if prog is None:
-            prog = jax.jit(
+            prog = self._jit(
                 lambda p, t, c, s, k=k: lm.decode_steps(
                     p, self.cfg, t, c, k,
                     sampler=s, sample_fn=sampling.sample),
-                donate_argnums=(2, 3))
+                donate=(2, 3),
+                in_sh=(self._sh_params, self._sh_tokens, self._sh_caches,
+                       self._sh_sampler),
+                out_sh=((self._sh_toks2d, self._sh_toks2d, self._sh_tokens,
+                         self._sh_caches, self._sh_sampler)
+                        if self.mesh is not None else None))
             self._decode_p[k] = prog
         toks, valid, self.tokens, self.caches, self.sampler = prog(
             self.params, self.tokens, self.caches, self.sampler)

@@ -1,0 +1,216 @@
+"""Host-side router: one front door over one-or-more per-mesh engines.
+
+A single ``Scheduler``/``DecodeEngine`` owns one device mesh — one SPMD
+tick program over one set of slot buffers.  Scaling past a mesh (more
+hosts, more device islands, heterogeneous topologies) is a *routing*
+problem, not a sharding problem: the ``Router`` fronts N engines, places
+each submitted request on one of them, ticks them all, and aggregates
+their metrics.  It never touches a device buffer and knows nothing about
+meshes — engines are opaque behind ``submit`` / ``step`` / ``withdraw``
+/ ``load``.
+
+Placement policies:
+  * ``round_robin``  — cycle over non-draining engines (uniform traffic);
+  * ``least_loaded`` — engine with the fewest owed requests
+    (active + queued + staging), ties to the lowest index (default).
+
+Backlog control:
+  * ``rebalance()`` — when one engine is *shard-full* (every slot busy
+    AND requests queued) while another has idle capacity (free slots not
+    already claimed by its own queue/staging), queued-but-not-yet-staged
+    requests migrate from the fullest engine's queue tail to the idlest
+    engine.  Runs automatically at every ``step``; staged/active requests
+    never move (their prefill lives in device staging buffers).
+  * ``drain(i)`` — stop placing on engine ``i`` and move its queued
+    requests to the others (scale-down / maintenance); active and staged
+    requests finish in place.  ``undrain(i)`` re-admits it.
+
+Requests keep their original ``t_submit`` across migrations, so TTFT
+measures the client's wait, not the router's shuffling.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Dict, List, Sequence
+
+from repro.serving.scheduler import Request, Scheduler
+
+
+class Router:
+    """Round-robin / least-loaded front door over serving engines."""
+
+    def __init__(self, engines: Sequence[Scheduler], *,
+                 policy: str = "least_loaded"):
+        if not engines:
+            raise ValueError("Router needs at least one engine")
+        if policy not in ("round_robin", "least_loaded"):
+            raise ValueError(f"unknown placement policy {policy!r}; have "
+                             f"'round_robin', 'least_loaded'")
+        self.engines: List[Scheduler] = list(engines)
+        self.policy = policy
+        self._rr = 0                               # round-robin cursor
+        self._draining = set()                     # engine indices
+        self.placed = [0] * len(self.engines)      # submits per engine
+        self.migrated = 0                          # rebalance moves
+
+    # --------------------------------------------------------- placement
+    def _live(self) -> List[int]:
+        live = [i for i in range(len(self.engines))
+                if i not in self._draining]
+        if not live:
+            raise RuntimeError("all engines are draining; undrain one "
+                               "before submitting")
+        return live
+
+    def _place(self) -> int:
+        live = self._live()
+        if self.policy == "round_robin":
+            idx = live[self._rr % len(live)]
+            self._rr += 1
+            return idx
+        return min(live, key=lambda i: (self.engines[i].load, i))
+
+    def submit(self, req: Request) -> int:
+        """Validate + enqueue ``req`` on an engine; returns its index."""
+        idx = self._place()
+        self.engines[idx].submit(req)
+        self.placed[idx] += 1
+        return idx
+
+    # --------------------------------------------------------- rebalance
+    def _idle_capacity(self, eng: Scheduler) -> int:
+        """Free slots not already claimed by the engine's own backlog."""
+        return len(eng.free) - len(eng.queue) - len(eng._stagings)
+
+    def _move(self, req: Request, donor: int, taker: int) -> bool:
+        """Re-home a withdrawn request, preserving ``t_submit`` (TTFT
+        measures the client's wait, not the router's shuffling).  If the
+        taker rejects it (heterogeneous engines — e.g. a smaller
+        ``max_len``), the request goes back on the donor's queue and the
+        migration is abandoned rather than the request dropped."""
+        t_submit = req.t_submit
+        try:
+            self.engines[taker].submit(req)
+        except ValueError as e:
+            self.engines[donor].readmit(req)
+            req.t_submit = t_submit
+            warnings.warn(f"router: engine {taker} rejected migrated "
+                          f"req {req.rid} ({e}); kept on engine {donor}",
+                          RuntimeWarning)
+            return False
+        req.t_submit = t_submit
+        self.placed[taker] += 1
+        self.placed[donor] -= 1
+        return True
+
+    def rebalance(self) -> int:
+        """Move queued requests off shard-full engines onto idle ones.
+        Returns the number of migrations."""
+        moved = 0
+        while True:
+            donors = [i for i in self._live()
+                      if self.engines[i].queue and not self.engines[i].free]
+            takers = [i for i in self._live()
+                      if self._idle_capacity(self.engines[i]) > 0]
+            if not donors or not takers:
+                return moved
+            donor = max(donors, key=lambda i: len(self.engines[i].queue))
+            taker = min(takers,
+                        key=lambda i: (-self._idle_capacity(self.engines[i]),
+                                       i))
+            req = self.engines[donor].withdraw()
+            if req is None:             # raced empty — nothing left to move
+                return moved
+            if not self._move(req, donor, taker):
+                return moved            # taker rejected; req is back home
+            moved += 1
+            self.migrated += 1
+
+    def drain(self, idx: int) -> int:
+        """Stop placing on engine ``idx`` and migrate its queued requests
+        to the remaining engines.  Active/staged requests finish in place.
+        Returns the number of requests moved."""
+        if not 0 <= idx < len(self.engines):
+            raise IndexError(f"no engine {idx}")
+        self._draining.add(idx)
+        self._live()                    # raises if nothing is left to serve
+        moved = 0
+        while True:
+            # oldest-first: the full queue migrates in arrival order
+            req = self.engines[idx].withdraw(oldest=True)
+            if req is None:
+                break
+            if not self._move(req, idx, self._place()):
+                break                   # rejected: left on the drained
+                                        # engine (it still serves actives)
+            moved += 1
+        return moved
+
+    def undrain(self, idx: int):
+        self._draining.discard(idx)
+
+    # -------------------------------------------------------------- tick
+    @property
+    def pending(self) -> int:
+        return sum(e.load for e in self.engines)
+
+    def step(self):
+        """One router tick: rebalance backlog, then tick every engine."""
+        if len(self.engines) > 1:
+            self.rebalance()
+        for eng in self.engines:
+            eng.step()
+
+    def run_until_done(self, max_ticks: int = 10_000, *,
+                       strict: bool = True) -> List[Request]:
+        for _ in range(max_ticks):
+            if self.pending == 0:
+                break
+            self.step()
+        if self.pending:
+            msg = (f"Router.run_until_done: max_ticks={max_ticks} "
+                   f"exhausted with {self.pending} request(s) unfinished "
+                   f"across {len(self.engines)} engines")
+            if strict:
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning)
+        return [r for e in self.engines for r in e._all if r.done]
+
+    # ----------------------------------------------------------- metrics
+    def reset_metrics(self):
+        for eng in self.engines:
+            eng.reset_metrics()
+
+    def metrics(self) -> Dict[str, object]:
+        """Aggregate metrics over all engines: counters summed, per-request
+        means weighted by each engine's completed-request count, plus the
+        per-engine dicts and the router's own placement counters."""
+        per = [e.metrics() for e in self.engines]
+        n = [m["requests"] for m in per]
+
+        def wmean(key):
+            tot = sum(n)
+            if not tot:
+                return 0.0
+            return float(sum(m[key] * c for m, c in zip(per, n)) / tot)
+
+        decode_s = sum(m["decode_s"] for m in per)
+        decoded = sum(m["decoded_tokens"] for m in per)
+        return {
+            "engines": len(self.engines),
+            "policy": self.policy,
+            "requests": sum(n),
+            "tokens": sum(m["tokens"] for m in per),
+            "ticks": sum(m["ticks"] for m in per),
+            "decoded_tokens": decoded,
+            "decode_s": decode_s,
+            "decode_us_per_token": decode_s / max(1, decoded) * 1e6,
+            "stage_dispatches": sum(m["stage_dispatches"] for m in per),
+            "mean_ttft_s": wmean("mean_ttft_s"),
+            "mean_latency_s": wmean("mean_latency_s"),
+            "mean_tokens_per_s": wmean("mean_tokens_per_s"),
+            "placed": list(self.placed),
+            "migrated": self.migrated,
+            "draining": sorted(self._draining),
+            "per_engine": per,
+        }

@@ -10,22 +10,29 @@ device buffer directly; it decides *what* to dispatch and *when*:
      rolling window caches mid-prompt and silently corrupt them) and
      appends it to a FIFO queue.
   2. **staging admit** (overlapped, the default): queued requests prefill
-     *chunk by chunk* into the executor's staging buffers at tick
+     *chunk by chunk* into the executor's staging ring at tick
      boundaries.  While free slots exist this is work-conserving (same
-     admits as the serialized baseline); once every slot is busy, the
-     head-of-queue request still prefills ahead of any free slot, emits
-     its first token (the final chunk fuses the draw on device — no host
-     ``sample_np``), and is held staged-ready until a slot frees.  TTFT is
-     stamped when that token is device-confirmed (synced to the host),
-     not when the dispatch is queued.  With ``overlap=False`` the same
-     programs run back-to-back behind a free slot (the serialized
-     baseline — token streams are bitwise identical, only timing moves).
+     admits as the serialized baseline); once every slot is busy, up to
+     ``staging_depth`` head-of-queue requests still prefill ahead of any
+     free slot — one chunk dispatch per staged request per tick — emit
+     their first tokens (the final chunk fuses the draw on device — no
+     host ``sample_np``), and are held staged-ready until slots free
+     (scattered in FIFO order).  TTFT is stamped when that token is
+     device-confirmed (synced to the host), not when the dispatch is
+     queued.  With ``overlap=False`` the same programs run back-to-back
+     behind a free slot (the serialized baseline — token streams are
+     bitwise identical, only timing moves).
   3. **tick** (`step`): one fused decode+sample scan over all slots.  The
      tick length is **budget-aware**: the smallest power-of-two bucket
      (capped at ``decode_block``) covering the largest remaining per-slot
      budget, so the tail ticks of a batch of short budgets stop burning
      masked steps — bucketing bounds the compile cache.
   4. finished slots (device EOS/budget flags) are freed at tick boundaries.
+
+With ``mesh`` set, the executor allocates every buffer with NamedShardings
+(slot axis on "data", state heads / KV context on "model") and compiles
+every program with explicit in/out shardings — the scheduler logic is
+topology-blind; only the buffers underneath it are distributed.
 
 Wall-clock metrics (TTFT, latency, throughput) are stamped per request;
 ``metrics()`` aggregates them plus the decode-only µs/token that
@@ -42,7 +49,7 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.serving.executor import DeviceExecutor
+from repro.serving.executor import DeviceExecutor, PlanStep
 
 
 @dataclass
@@ -95,13 +102,26 @@ class Request:
         return self.prompt if self.prompt is not None else self.prompt_embeds
 
 
+@dataclass(eq=False)      # identity semantics: entries are removed by `is`
+class _Staging:
+    """One in-flight staged prefill: a request bound to an executor ring
+    buffer, with its chunk-plan progress and staged-ready flag."""
+    req: Request
+    plan: List[PlanStep]
+    buf: int
+    plan_pos: int = 0
+    prompt_pos: int = 0
+    ready: bool = False
+
+
 class Scheduler:
     """Continuous-batching decode scheduler over a ``DeviceExecutor``."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
                  max_len: int = 256, seed: int = 0, decode_block: int = 1,
                  overlap: bool = True, prefill_chunk: int = 16,
-                 budget_ticks: bool = True):
+                 budget_ticks: bool = True, mesh=None,
+                 staging_depth: int = 2):
         if decode_block < 1:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
         self.cfg = cfg
@@ -114,17 +134,16 @@ class Scheduler:
         self.budget_ticks = budget_ticks
         self.executor = DeviceExecutor(
             cfg, params, max_slots=max_slots, max_len=max_len,
-            decode_block=decode_block, prefill_chunk=prefill_chunk)
+            decode_block=decode_block, prefill_chunk=prefill_chunk,
+            mesh=mesh, staging_depth=staging_depth)
         self.free: Deque[int] = deque(range(max_slots))
         self.active: Dict[int, Request] = {}
         self.queue: Deque[Request] = deque()
         self._all: List[Request] = []
-        # staging state machine (one request prefilling ahead of its slot)
-        self._staging: Optional[Request] = None
-        self._plan = []
-        self._plan_pos = 0
-        self._prompt_pos = 0
-        self._staged_ready = False
+        # staging state machine: FIFO of in-flight staged prefills, one per
+        # executor ring buffer (free ring indices in _free_bufs)
+        self._stagings: List[_Staging] = []
+        self._free_bufs: Deque[int] = deque(range(self.staging_depth))
         self.ticks = 0
         self.decode_s = 0.0         # wall time inside decode ticks (+ sync)
         self.decoded_tokens = 0     # tokens emitted by ticks (not admit)
@@ -139,6 +158,14 @@ class Scheduler:
     @property
     def prefill_chunk(self) -> int:
         return self.executor.prefill_chunk
+
+    @property
+    def staging_depth(self) -> int:
+        return self.executor.staging_depth
+
+    @property
+    def mesh(self):
+        return self.executor.mesh
 
     @property
     def state_bytes_per_slot(self) -> int:
@@ -163,6 +190,11 @@ class Scheduler:
     @property
     def sampler(self):
         return self.executor.sampler
+
+    @property
+    def _staging(self) -> Optional[Request]:
+        """Head-of-line staged request (back-compat view of the ring)."""
+        return self._stagings[0].req if self._stagings else None
 
     # ------------------------------------------------------------ submit
     def submit(self, req: Request):
@@ -197,94 +229,128 @@ class Scheduler:
         self.queue.append(req)
         self._all.append(req)
 
+    def withdraw(self, *, oldest: bool = False) -> Optional[Request]:
+        """Remove and return a queued (not yet staging) request, or None.
+        Used by the router to move backlog across engines: rebalance
+        steals the *newest* (default — the head of the queue keeps its
+        FIFO TTFT), drain migrates *oldest*-first so arrival order
+        survives the full-queue move."""
+        if not self.queue:
+            return None
+        req = self.queue.popleft() if oldest else self.queue.pop()
+        # identity removal (Request is a dataclass; two equal-field
+        # requests must not alias), keeping the reset_metrics watermark
+        # pointed at the same element
+        idx = next(i for i, r in enumerate(self._all) if r is req)
+        del self._all[idx]
+        if idx < self._metrics_from:
+            self._metrics_from -= 1
+        return req
+
+    def readmit(self, req: Request):
+        """Put a withdrawn request back at the queue tail (router's undo
+        when no other engine can accept it); t_submit is preserved."""
+        self.queue.append(req)
+        self._all.append(req)
+
+    @property
+    def load(self) -> int:
+        """Requests this engine still owes work to (router placement)."""
+        return len(self.active) + len(self.queue) + len(self._stagings)
+
     def _finished(self, req: Request, tok: int) -> bool:
         return (len(req.output) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id))
 
     # ----------------------------------------------------------- staging
     def _stage_start(self, req: Request):
-        self._staging = req
-        self._plan = self.executor.plan_prefill(req.prompt_len)
-        self._plan_pos = 0
-        self._prompt_pos = 0
-        self._staged_ready = False
+        buf = self._free_bufs.popleft()
+        self._stagings.append(_Staging(
+            req=req, plan=self.executor.plan_prefill(req.prompt_len),
+            buf=buf))
         self.executor.stage_begin(
-            seed=self.seed, rid=req.rid, temperature=req.temperature,
+            buf, seed=self.seed, rid=req.rid, temperature=req.temperature,
             top_k=req.top_k, top_p=req.top_p, eos_id=req.eos_id,
             budget=req.max_new_tokens)
 
-    def _stage_dispatch_one(self):
-        kind, n = self._plan[self._plan_pos]
-        inputs = self._staging._inputs
+    def _stage_dispatch_one(self, st: _Staging):
+        kind, n = st.plan[st.plan_pos]
+        inputs = st.req._inputs
         size = n * self.executor.prefill_chunk if kind == "scan" else n
-        chunk = inputs[self._prompt_pos:self._prompt_pos + size]
+        chunk = inputs[st.prompt_pos:st.prompt_pos + size]
         if kind == "scan":
-            self.executor.stage_chunk_scan(chunk)
+            self.executor.stage_chunk_scan(st.buf, chunk)
         elif kind == "chunk":
-            self.executor.stage_chunk(chunk)
+            self.executor.stage_chunk(st.buf, chunk)
         else:
-            self.executor.stage_admit(chunk)
-        self._prompt_pos += size
-        self._plan_pos += 1
+            self.executor.stage_admit(st.buf, chunk)
+        st.prompt_pos += size
+        st.plan_pos += 1
         self.stage_dispatches += 1
 
-    def _stage_finish(self):
+    def _stage_finish(self, st: _Staging):
         """Plan complete: sync the fused first token (this is the
         device-confirmed admit — TTFT is stamped here, not when the
         dispatch was queued) and either complete the request (EOS /
         max_new_tokens=1, never occupying a slot) or hold it staged-ready
         until a slot frees."""
-        req = self._staging
-        tok = int(np.asarray(self.executor.staging_tok)[0])
+        req = st.req
+        tok = int(np.asarray(self.executor.staging_tok[st.buf])[0])
         req.t_first = time.perf_counter()
         req.output.append(tok)
         if self._finished(req, tok):
             req.done = True
             req.t_done = req.t_first
-            self._staging = None
+            self._stagings.remove(st)
+            self._free_bufs.append(st.buf)
             return
-        self._staged_ready = True
+        st.ready = True
 
     def _stage_scatter(self):
+        st = self._stagings.pop(0)
         slot = self.free.popleft()
-        self.executor.scatter(slot)
-        self.active[slot] = self._staging
-        self._staging = None
-        self._staged_ready = False
+        self.executor.scatter(slot, st.buf)
+        self._free_bufs.append(st.buf)
+        self.active[slot] = st.req
 
     def _admit(self):
         """Advance the admit pipeline at a tick boundary.
 
         Work-conserving: while free slots exist, queued requests prefill
         and scatter exactly as the serialized baseline does.  The overlap
-        is purely additive — when every slot is busy, the head-of-queue
-        request *still* streams its chunk plan into the staging buffer,
-        **one chunk dispatch per tick** so the resident slots keep
-        decoding between chunks, and emits its fused-sample first token at
-        plan completion, held staged-ready until a slot frees (at most one
-        such ahead-of-slot prefill can be outstanding, because the staged
-        request owns the staging buffer until its scatter).  Overlapped
-        TTFT is therefore never structurally worse than serialized, and
-        strictly better whenever a request would have had to wait for a
-        slot before prefilling."""
+        is purely additive — when every slot is busy, up to
+        ``staging_depth`` head-of-queue requests *still* stream their
+        chunk plans into the staging ring, **one chunk dispatch per
+        staged request per tick** so the resident slots keep decoding
+        between chunks, and emit their fused-sample first tokens at plan
+        completion, held staged-ready until slots free (scattered in FIFO
+        order).  Overlapped TTFT is therefore never structurally worse
+        than serialized, and strictly better whenever a request would
+        have had to wait for a slot before prefilling."""
+        yielded = set()     # stagings that already dispatched this tick
         while True:
-            if self._staging is None:
-                if not self.queue:
-                    return
-                if not self.free and not self.overlap:
-                    return      # serialized admit waits for a slot up front
+            # FIFO scatter: the head staged-ready request takes the slot
+            if self._stagings and self._stagings[0].ready:
+                if self.free:
+                    self._stage_scatter()
+                    continue    # next queued request may start staging
+            # start staging while ring buffers allow (serialized admit
+            # waits for a free slot up front)
+            if (self.queue and self._free_bufs
+                    and (self.free or self.overlap)):
                 self._stage_start(self.queue.popleft())
-            if self._staged_ready:
-                if not self.free:
-                    return      # token already emitted; slot-bound
-                self._stage_scatter()
-                continue        # next queued request may start staging
-            self._stage_dispatch_one()
-            if self._plan_pos == len(self._plan):
-                self._stage_finish()
+                continue
+            st = next((s for s in self._stagings
+                       if not s.ready and id(s) not in yielded), None)
+            if st is None:
+                return
+            self._stage_dispatch_one(st)
+            if st.plan_pos == len(st.plan):
+                self._stage_finish(st)
             elif not self.free and self.active:
-                return          # ahead-of-slot: yield so the resident
-                                # slots decode between prefill chunks
+                yielded.add(id(st))     # ahead-of-slot: one chunk per tick
+                                        # so the resident slots decode
+                                        # between prefill chunks
 
     # -------------------------------------------------------------- tick
     def _tick_k(self) -> int:
@@ -303,10 +369,10 @@ class Scheduler:
 
     def step(self):
         """One engine tick: advance the admit pipeline (free slots fill as
-        in the serialized baseline, plus at most one ahead-of-slot staged
-        prefill when every slot is busy), then one fused decode+sample
-        scan, then emit and free — a single host sync for the decode
-        block."""
+        in the serialized baseline, plus up to ``staging_depth``
+        ahead-of-slot staged prefills when every slot is busy), then one
+        fused decode+sample scan, then emit and free — a single host sync
+        for the decode block."""
         self._admit()
         if not self.active:
             return
@@ -333,13 +399,13 @@ class Scheduler:
     def run_until_done(self, max_ticks: int = 10_000, *,
                        strict: bool = True) -> List[Request]:
         for _ in range(max_ticks):
-            if not self.queue and not self.active and self._staging is None:
+            if not self.queue and not self.active and not self._stagings:
                 break
             self.step()
-        if self.queue or self.active or self._staging is not None:
+        if self.queue or self.active or self._stagings:
             msg = (f"run_until_done: max_ticks={max_ticks} exhausted with "
                    f"{len(self.queue)} queued, {len(self.active)} active, "
-                   f"{int(self._staging is not None)} staging request(s) "
+                   f"{len(self._stagings)} staging request(s) "
                    f"unfinished — raise max_ticks or inspect the engine")
             if strict:
                 raise RuntimeError(msg)
@@ -363,6 +429,7 @@ class Scheduler:
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
         lats = [r.latency_s for r in done if r.latency_s is not None]
         tps = [r.tokens_per_s for r in done if r.tokens_per_s is not None]
+        mesh = self.executor.mesh
         return {
             "requests": len(done),
             "tokens": sum(len(r.output) for r in done),
@@ -375,6 +442,10 @@ class Scheduler:
             "stage_dispatches": self.stage_dispatches,
             "overlap": int(self.overlap),
             "prefill_chunk": self.executor.prefill_chunk,
+            "staging_depth": self.staging_depth,
+            "mesh_data": int(mesh.shape["data"]) if mesh is not None else 1,
+            "mesh_model": (int(mesh.shape["model"])
+                           if mesh is not None else 1),
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
             "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
             "mean_tokens_per_s": float(np.mean(tps)) if tps else 0.0,
