@@ -1,6 +1,7 @@
-"""Serving-engine benchmarks: host-sync overhead and TTFT under load.
+"""Serving-engine benchmarks: host-sync overhead, TTFT under load and
+cold-start compile cost.
 
-Two measurements, both on the reduced CPU configs (absolute numbers are
+All measurements run on the reduced CPU configs (absolute numbers are
 CPU-interpreter scale; only the trend is the claim):
 
 1. **decode-block sweep** — the engine fuses ``decode_block`` (k)
@@ -20,7 +21,19 @@ CPU-interpreter scale; only the trend is the claim):
    overlapped mean is strictly better, and asserts the token streams are
    bitwise identical (overlap moves timing, never sampling).
 
-3. **mesh scaling** — (multi-device backends only, e.g.
+3. **cold TTFT: masked vs pow2 chunk plans** — the first prompt a fresh
+   engine serves pays jit tracing + XLA compilation for every program its
+   chunk plan touches.  The masked planner dispatches at most TWO
+   distinct prefill shapes per prompt (one scan + one fixed-size masked
+   tail) where the pow2 baseline compiles a program per power-of-two
+   tail sub-chunk, so cold TTFT (submit → first token device-confirmed,
+   compiles included) drops with the program count.  The benchmark
+   serves one awkward-length prompt on a fresh engine per mode
+   (median-of-trials), reports both TTFTs, and asserts the masked
+   planner's *prefill program count* is strictly smaller (the wall-clock
+   is reported, not asserted — CI machines are noisy).
+
+4. **mesh scaling** — (multi-device backends only, e.g.
    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU) the
    engine's slot axis is data-parallel over the mesh: holding the
    per-device slot count fixed and growing the data axis grows tokens
@@ -147,6 +160,61 @@ def run_ttft_under_load(quick: bool = False):
         f"{overlapped * 1e3:.1f} ms >= {serialized * 1e3:.1f} ms")
 
 
+def _cold_ttft(cfg, params, *, plan_mode: str, prompt_len: int,
+               trials: int):
+    """First-prompt TTFT on a fresh engine: tracing + compile + prefill.
+
+    A fresh ``DeviceExecutor`` per trial means every prefill program in
+    the prompt's chunk plan is compiled from scratch (jit caches key on
+    the per-engine closures), which is exactly the cold-start cost the
+    masked planner shrinks.  Returns (median TTFT s, prefill program
+    count, token stream of the last trial)."""
+    ttfts = []
+    for trial in range(trials):
+        eng = DecodeEngine(cfg, params, max_slots=2, max_len=128,
+                           decode_block=4, prefill_chunk=8,
+                           plan_mode=plan_mode)
+        req = Request(rid=trial, prompt=np.arange(1, prompt_len + 1,
+                                                  dtype=np.int32),
+                      max_new_tokens=5)
+        eng.submit(req)
+        eng.run_until_done()
+        ttfts.append(req.ttft_s)
+        stream = list(req.output)
+    progs = eng.executor.compiled_programs()["prefill"]
+    return float(np.median(ttfts)), progs, stream
+
+
+def run_cold_ttft(quick: bool = False):
+    """Cold-TTFT comparison of the masked planner vs the pow2 baseline.
+
+    77 tokens with chunk 8 is an awkward length: pow2 needs scan(4) +
+    scan(1) + chunk(4) + admit(1) = 4 prefill programs, masked needs
+    scan(3) + masked admit = 2."""
+    arch = "qwen3-next-gdn"
+    cfg = configs.get_arch(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    trials = 3 if quick else 5
+    results = {}
+    for mode in ("pow2", "masked"):
+        ttft, progs, stream = _cold_ttft(cfg, params, plan_mode=mode,
+                                         prompt_len=77, trials=trials)
+        results[mode] = (ttft, progs, stream)
+        emit(f"serving/{arch}/cold_ttft_{mode}", ttft * 1e3,
+             f"first_prompt_ttft_ms_incl_compiles;prefill_programs="
+             f"{progs};prompt_len=77;prefill_chunk=8;trials={trials};"
+             f"reduced_cpu")
+    assert results["masked"][2] == results["pow2"][2], \
+        "plan mode must move compile counts only — token streams diverged"
+    assert results["masked"][1] < results["pow2"][1], (
+        f"masked planning must compile strictly fewer prefill programs: "
+        f"{results['masked'][1]} vs {results['pow2'][1]}")
+    emit(f"serving/{arch}/cold_ttft_speedup",
+         results["pow2"][0] / max(results["masked"][0], 1e-12),
+         f"pow2_over_masked;prefill_programs_"
+         f"{results['pow2'][1]}_vs_{results['masked'][1]}")
+
+
 def _tick_throughput(cfg, params, *, data: int, slots_per_shard: int,
                      max_new: int, trials: int) -> float:
     """Decode-only tokens/s of one saturated engine at data-axis size
@@ -204,6 +272,7 @@ def run_mesh_scaling(quick: bool = False):
 def run(quick: bool = False):
     run_block_sweep(quick=quick)
     run_ttft_under_load(quick=quick)
+    run_cold_ttft(quick=quick)
     run_mesh_scaling(quick=quick)
 
 

@@ -42,9 +42,18 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     s = scale * jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (Hg, Bt)
     pos = t * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = pos < length
+    # occupancy mask owned by the kernel: slot t holds a token iff
+    # t < length (linear phase) or always (rolling phase, length > T) —
+    # callers pass the raw token count, the kernel clamps to the buffer
+    total = n_blocks * block_t
+    valid = pos < jnp.minimum(length, total)
     if window is not None:
-        valid = jnp.logical_and(valid, pos >= length - window)
+        # window masking must compare *absolute positions*: slot `pos`
+        # holds the largest p < length with p ≡ pos (mod T), which is
+        # `pos` itself only in the linear phase — in the rolling phase
+        # the newest tokens wrap onto the lowest slots
+        p_abs = (length - 1) - jnp.mod(length - 1 - pos, total)
+        valid = jnp.logical_and(valid, p_abs >= length - window)
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_scr[...]                               # (Hg, 1)
@@ -73,7 +82,11 @@ def attn_decode_pallas(q, k_cache, v_cache, length, *, block_t: int = 256,
 
     q        : (B, Hq, d)
     k_cache  : (B, Hkv, T, d);  v_cache same
-    length   : (B,) int32 — valid context length per sequence
+    length   : (B,) int32 — valid tokens seen so far per sequence (may
+               exceed T for rolling caches: the kernel clamps the
+               occupancy mask to the buffer itself, so callers never
+               pre-clamp; with masked ragged prefill upstream this is
+               the count of *real* tokens, padding excluded)
     Returns o: (B, Hq, d).
     """
     B, Hq, d = q.shape

@@ -42,7 +42,7 @@ def _nilpotent_inv_apply(A, rhs, chunk):
 
 def _kernel(q_ref, k_ref, v_ref, lg_ref, b_ref, s0_ref, o_ref, s_out_ref,
             s_scr, *, chunk: int, scale: float, delta_rule: bool,
-            n_chunks: int):
+            n_chunks: int, vl_ref=None):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
@@ -54,6 +54,19 @@ def _kernel(q_ref, k_ref, v_ref, lg_ref, b_ref, s0_ref, o_ref, s_out_ref,
     k = k_ref[0].astype(jnp.float32)
     v = v_ref[0].astype(jnp.float32)                  # (C, d_v)
     lg = lg_ref[0].astype(jnp.float32)                # (C,) via (1, C) block
+    b = b_ref[0].astype(jnp.float32)                  # (C,)
+    if vl_ref is not None:
+        # ragged sequence: positions >= valid_len are padding.  Zeroing the
+        # k/v/beta columns and the log-gate contribution makes every padded
+        # token an exact no-op on the state (g=1, rank-1 update 0) and on
+        # every valid output row (their M/A columns vanish), so a fixed-size
+        # masked chunk is provably the same program as a right-sized one.
+        pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        vm = pos < vl_ref[0, 0]                       # (C, 1)
+        k = jnp.where(vm, k, 0.0)
+        v = jnp.where(vm, v, 0.0)
+        lg = jnp.where(vm[:, 0], lg, 0.0)
+        b = jnp.where(vm[:, 0], b, 0.0)
     L = jnp.cumsum(lg)                                # (C,)
     L_prev = L - lg
     gamma = jnp.exp(L)[:, None]
@@ -67,7 +80,7 @@ def _kernel(q_ref, k_ref, v_ref, lg_ref, b_ref, s0_ref, o_ref, s_out_ref,
     M = jnp.where(row >= col, decayM * qk, 0.0)       # inclusive lower
 
     if delta_rule:
-        beta = b_ref[0].astype(jnp.float32)[:, None]  # (C, 1)
+        beta = b[:, None]                             # (C, 1)
         kk = jnp.dot(k, k.T, preferred_element_type=jnp.float32)
         decayA = jnp.exp(L_prev[:, None] - L[None, :])
         A = jnp.where(row > col, beta * decayA * kk, 0.0)
@@ -91,17 +104,27 @@ def _kernel(q_ref, k_ref, v_ref, lg_ref, b_ref, s0_ref, o_ref, s_out_ref,
         s_out_ref[0] = S_new.astype(s_out_ref.dtype)
 
 
+def _kernel_ragged(vl_ref, q_ref, k_ref, v_ref, lg_ref, b_ref, s0_ref,
+                   o_ref, s_out_ref, s_scr, **kw):
+    _kernel(q_ref, k_ref, v_ref, lg_ref, b_ref, s0_ref, o_ref, s_out_ref,
+            s_scr, vl_ref=vl_ref, **kw)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("chunk", "scale", "delta_rule", "interpret"))
-def gdn_prefill_pallas(q, k, v, log_g, beta, S0, *, chunk: int = 64,
-                       scale: float | None = None, delta_rule: bool = True,
-                       interpret: bool = False):
+def gdn_prefill_pallas(q, k, v, log_g, beta, S0, valid_len=None, *,
+                       chunk: int = 64, scale: float | None = None,
+                       delta_rule: bool = True, interpret: bool = False):
     """Chunkwise prefill over full sequences, state resident in VMEM.
 
     q, k : (BH, T, d_k) with BH = batch * h_v (q/k pre-grouped per v-head by
            the caller index map — see ops.gdn_prefill for the GVA mapping)
     v    : (BH, T, d_v);  log_g, beta: (BH, T);  S0: (BH, d_k, d_v)
+    valid_len : optional (BH,) int32 — per-sequence count of real tokens;
+           positions >= valid_len are padding, masked *inside* the kernel so
+           the final state and the valid output rows are exactly those of an
+           unpadded sequence (rows past valid_len are garbage — ignore them).
     Returns O: (BH, T, d_v), S_final: (BH, d_k, d_v).
     """
     BH, T, d_k = q.shape
@@ -127,6 +150,12 @@ def gdn_prefill_pallas(q, k, v, log_g, beta, S0, *, chunk: int = 64,
         pl.BlockSpec((1, chunk), lambda b, c: (b, c)),           # beta
         pl.BlockSpec((1, d_k, d_v), lambda b, c: (b, 0, 0)),     # S0
     ]
+    args = (q, k, v, log_g, beta, S0)
+    if valid_len is not None:
+        kern = functools.partial(_kernel_ragged, chunk=chunk, scale=scale,
+                                 delta_rule=delta_rule, n_chunks=n_chunks)
+        in_specs = [pl.BlockSpec((1, 1), lambda b, c: (b, 0))] + in_specs
+        args = (valid_len.reshape(BH, 1).astype(jnp.int32),) + args
     out_specs = [
         pl.BlockSpec((1, chunk, d_v), lambda b, c: (b, c, 0)),
         pl.BlockSpec((1, d_k, d_v), lambda b, c: (b, 0, 0)),
@@ -142,5 +171,5 @@ def gdn_prefill_pallas(q, k, v, log_g, beta, S0, *, chunk: int = 64,
             dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)),
         interpret=interpret,
         name=f"gdn_prefill_c{chunk}",
-    )(q, k, v, log_g, beta, S0)
+    )(*args)
     return O, S_fin

@@ -38,13 +38,18 @@ def gdn_decode(q, k, v, S, g, beta, *, head_block=8, scale=None,
 
 
 def gdn_prefill(q, k, v, log_g, beta, S0, *, chunk=64, scale=None,
-                delta_rule=True, interpret=None):
+                delta_rule=True, interpret=None, valid_len=None):
     """Chunkwise prefill, state resident in VMEM across the chunk grid.
 
     Batched head layout: q,k (B, T, Hk, d_k), v (B, T, Hv, d_v),
     log_g/beta (B, T, Hv), S0 (B, Hv, d_k, d_v).  GVA q/k sharing is done
     via the kernel's row indexing (q/k rows repeated per v-head pair).
+
+    ``valid_len`` (optional, scalar or (B,) int32): ragged sequences padded
+    to T — the kernel masks positions >= valid_len so the returned state
+    and the valid output rows are exactly those of the unpadded sequence.
     """
+    import jax.numpy as jnp
     if interpret is None:
         interpret = not _on_tpu()
     B, T, Hk, d_k = q.shape
@@ -55,7 +60,6 @@ def gdn_prefill(q, k, v, log_g, beta, S0, *, chunk=64, scale=None,
     qh = q.transpose(0, 2, 1, 3)
     kh = k.transpose(0, 2, 1, 3)
     if R > 1:
-        import jax.numpy as jnp
         qh = jnp.repeat(qh, R, axis=1)
         kh = jnp.repeat(kh, R, axis=1)
     qh = qh.reshape(B * Hv, T, d_k)
@@ -64,7 +68,11 @@ def gdn_prefill(q, k, v, log_g, beta, S0, *, chunk=64, scale=None,
     lgh = log_g.transpose(0, 2, 1).reshape(B * Hv, T)
     bh = beta.transpose(0, 2, 1).reshape(B * Hv, T)
     S0h = S0.reshape(B * Hv, d_k, S0.shape[-1])
-    O, S = gdn_prefill_pallas(qh, kh, vh, lgh, bh, S0h, chunk=chunk,
+    vlh = None
+    if valid_len is not None:
+        vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (B,))
+        vlh = jnp.repeat(vl, Hv, axis=0)               # (B * Hv,)
+    O, S = gdn_prefill_pallas(qh, kh, vh, lgh, bh, S0h, vlh, chunk=chunk,
                               scale=scale, delta_rule=delta_rule,
                               interpret=interpret)
     O = O.reshape(B, Hv, T, d_v).transpose(0, 2, 1, 3)

@@ -71,7 +71,8 @@ def build_engines(cfg, params, args, topo: ServingTopology):
             seed=args.seed, decode_block=args.decode_block,
             overlap=args.overlap, prefill_chunk=args.prefill_chunk,
             budget_ticks=args.budget_ticks, mesh=mesh,
-            staging_depth=topo.staging_depth))
+            staging_depth=topo.staging_depth,
+            plan_mode=args.plan_mode))
     return engines, slots
 
 
@@ -87,6 +88,13 @@ def main():
                          "(host syncs once per block)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt chunk size for staged prefill")
+    ap.add_argument("--plan-mode", default="masked",
+                    choices=("masked", "pow2"),
+                    help="prefill chunk planning: 'masked' (default) "
+                         "dispatches one scan shape + one fixed-size "
+                         "valid_len-masked tail per prompt (O(1) compile "
+                         "cache); 'pow2' keeps the power-of-two tail "
+                         "decomposition as the comparison baseline")
     ap.add_argument("--mesh", default="1,1",
                     help="engine mesh topology DATA,MODEL (slot axis on "
                          "data, state heads / KV context on model); "
@@ -136,7 +144,7 @@ def main():
           f" = {eng.cache_bytes / 2**20:.2f} MiB slot buffers, "
           f"decode_block={args.decode_block}, "
           f"prefill={'overlapped' if args.overlap else 'serialized'} "
-          f"chunks of {eng.prefill_chunk}")
+          f"chunks of {eng.prefill_chunk} ({eng.plan_mode} plans)")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 17),

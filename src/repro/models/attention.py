@@ -164,7 +164,7 @@ def attn_prefill(p, x, cache: KVCache, *, rope_theta=10000.0, window=None,
 
 
 def attn_prefill_chunk(p, x, cache: KVCache, *, rope_theta=10000.0,
-                       window=None, head_mask=None):
+                       window=None, head_mask=None, valid_len=None):
     """Process one prompt chunk *continuing from* the cache.
 
     Unlike ``attn_prefill`` (which assumes a fresh cache and positions
@@ -176,6 +176,15 @@ def attn_prefill_chunk(p, x, cache: KVCache, *, rope_theta=10000.0,
     is occupied and its token is among the ``size`` most recent at ``pos``
     (the rolling buffer holds exactly those, so this matches what serial
     `attn_decode_xla` calls would see).
+
+    ``valid_len`` (optional scalar int32) marks a ragged chunk padded to
+    C: only the first valid_len tokens are real.  Padded positions are
+    **not** inserted into the rolling buffer (a wrapped-slot write would
+    overwrite still-visible valid tokens) and ``length`` advances by
+    ``valid_len`` only; their k/v never reach a valid query's scores
+    (in-chunk visibility is causal, and every padded position sits after
+    every valid one).  Output rows at padded positions are garbage —
+    callers ignore them.
 
     x: (B, C, d_model) with C <= cache size (the rolling scatter writes
     each chunk token to a distinct slot).  Returns (out (B, C, d), cache).
@@ -250,11 +259,18 @@ def attn_prefill_chunk(p, x, cache: KVCache, *, rope_theta=10000.0,
 
     # --- rolling insert of the chunk (distinct slots since C <= size) -
     slots = jnp.mod(pos, size)                                 # (B, C)
+    if valid_len is not None:
+        # padded positions must not touch the buffer: in the rolling phase
+        # their wrapped slot aliases a still-visible valid token.  Routing
+        # them to the out-of-bounds slot `size` with mode="drop" makes the
+        # scatter skip them entirely.
+        slots = jnp.where(jnp.arange(C)[None, :] < valid_len, slots, size)
     new_k = jax.vmap(lambda ck, kk, sl: ck.at[:, sl, :].set(
-        kk.astype(ck.dtype)))(cache.k, kc, slots)
+        kk.astype(ck.dtype), mode="drop"))(cache.k, kc, slots)
     new_v = jax.vmap(lambda cv, vv, sl: cv.at[:, sl, :].set(
-        vv.astype(cv.dtype)))(cache.v, vc, slots)
-    return out, KVCache(new_k, new_v, cache.length + C)
+        vv.astype(cv.dtype), mode="drop"))(cache.v, vc, slots)
+    adv = C if valid_len is None else valid_len
+    return out, KVCache(new_k, new_v, cache.length + adv)
 
 
 def _cache_insert(cache: KVCache, k_t, v_t):
@@ -323,8 +339,8 @@ def attn_decode_pallas(p, x_t, cache: KVCache, *, rope_theta=10000.0,
     q = layers.apply_rope(q[:, None], pos[:, None], rope_theta)[:, 0]
     k = layers.apply_rope(k[:, None], pos[:, None], rope_theta)[:, 0]
     cache = _cache_insert(cache, k, v)
-    eff_len = jnp.minimum(cache.length, cache.k.shape[2])
-    o = ops.attn_decode(q, cache.k, cache.v, eff_len,
+    # raw token count: the kernel owns the occupancy clamp to the buffer
+    o = ops.attn_decode(q, cache.k, cache.v, cache.length,
                         block_t=min(block_t, cache.k.shape[2]))
     out = jnp.einsum("bhk,hkd->bd", o, p["wo"]).astype(x_t.dtype)
     return out, cache

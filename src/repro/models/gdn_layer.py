@@ -79,13 +79,40 @@ def gdn_train(p, x, *, chunk=64):
     return jnp.einsum("bthk,hkd->btd", O, p["wo"]).astype(x.dtype)
 
 
-def gdn_prefill(p, x, state: GDNState, *, chunk=64, use_pallas=False):
-    """Prompt processing; returns (out, final state)."""
+def mask_ragged_inputs(valid_len, k, v, log_g, beta):
+    """Zero the kernel inputs at padded positions (>= ``valid_len``).
+
+    A padded token with k = v = beta = 0 and log_g = 0 (gate 1) is an exact
+    no-op on the recurrent state and contributes nothing to any valid
+    output row, so a fixed-size chunk with a ragged tail computes the same
+    state/output as the unpadded sequence (outputs at padded rows are
+    garbage — callers ignore them).  ``valid_len``: scalar int32.
+    """
+    vm = jnp.arange(k.shape[1]) < valid_len            # (T,)
+    k = jnp.where(vm[None, :, None, None], k, jnp.zeros_like(k))
+    v = jnp.where(vm[None, :, None, None], v, jnp.zeros_like(v))
+    log_g = jnp.where(vm[None, :, None], log_g, jnp.zeros_like(log_g))
+    beta = jnp.where(vm[None, :, None], beta, jnp.zeros_like(beta))
+    return k, v, log_g, beta
+
+
+def gdn_prefill(p, x, state: GDNState, *, chunk=64, use_pallas=False,
+                valid_len=None):
+    """Prompt processing; returns (out, final state).
+
+    ``valid_len`` (optional scalar int32): positions >= valid_len of ``x``
+    are padding — masked so the returned state equals the unpadded run
+    (the Pallas kernel masks internally; the XLA path pre-masks k/v/gates).
+    """
     q, k, v, log_g, beta = _proj(p, x)
     if use_pallas:
         from repro.kernels import ops
-        O, S = ops.gdn_prefill(q, k, v, log_g, beta, state.S, chunk=chunk)
+        O, S = ops.gdn_prefill(q, k, v, log_g, beta, state.S, chunk=chunk,
+                               valid_len=valid_len)
     else:
+        if valid_len is not None:
+            k, v, log_g, beta = mask_ragged_inputs(valid_len, k, v,
+                                                   log_g, beta)
         O, S = gdn_core.gdn_prefill(
             q.astype(jnp.float32), k.astype(jnp.float32),
             v.astype(jnp.float32), log_g, beta,

@@ -236,7 +236,7 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int):
 # ---------------------------------------------------------------- prefill / decode
 
 def _run_cached(params, cfg: ArchConfig, x, caches, mode: str,
-                dp_axes=None):
+                dp_axes=None, valid_len=None):
     groups = build_groups(cfg)
     new_caches = []
     for (kinds, reps), gp, gc in zip(groups, params["groups"], caches):
@@ -252,7 +252,8 @@ def _run_cached(params, cfg: ArchConfig, x, caches, mode: str,
                     mix, nc = mixer.prefill(lp["mixer"], cfg, h, c_slice[i])
                 elif mode == "chunk":
                     mix, nc = mixer.prefill_chunk(lp["mixer"], cfg, h,
-                                                  c_slice[i])
+                                                  c_slice[i],
+                                                  valid_len=valid_len)
                 else:
                     mix, nc = mixer.decode(lp["mixer"], cfg, h, c_slice[i])
                 x = x + mix
@@ -279,7 +280,7 @@ def prefill(params, cfg: ArchConfig, caches, tokens=None, embeds=None,
 
 
 def prefill_chunk(params, cfg: ArchConfig, caches, tokens=None, embeds=None,
-                  dp_axes=None):
+                  dp_axes=None, valid_len=None):
     """Process one prompt chunk *continuing from* ``caches``.
 
     Unlike ``prefill`` this never computes logits (interior chunks don't
@@ -288,32 +289,48 @@ def prefill_chunk(params, cfg: ArchConfig, caches, tokens=None, embeds=None,
     at the cached position via ``prefill_chunk``).  Returns (final hidden
     (B, C, d), caches); feed the last chunk to ``prefill_sample`` for the
     logits + fused first-token draw.
+
+    ``valid_len`` (optional scalar int32) marks a *ragged* chunk padded to
+    its static size C: only the first valid_len tokens are real.  Every
+    mixer masks the padding so the returned caches are exactly those of
+    the unpadded prefix — one fixed-size masked program replaces the
+    whole family of tail-sized programs.  Hidden rows at padded positions
+    are garbage; callers must only read rows < valid_len.
     """
     x = embeds if embeds is not None else layers.embed_fwd(params["embed"],
                                                            tokens)
     x = _constrain(x.astype(jnp.dtype(cfg.act_dtype)), dp_axes)
-    return _run_cached(params, cfg, x, caches, "chunk", dp_axes=dp_axes)
+    return _run_cached(params, cfg, x, caches, "chunk", dp_axes=dp_axes,
+                       valid_len=valid_len)
 
 
 def prefill_chunk_scan(params, cfg: ArchConfig, caches, tokens=None,
-                       embeds=None, dp_axes=None):
+                       embeds=None, dp_axes=None, valid_lens=None):
     """``lax.scan`` of ``prefill_chunk`` over equal-size prompt chunks.
 
     tokens: (B, n, C) int32 / embeds: (B, n, C, d) — n chunks of C tokens
     each, processed in order with the caches threaded through the scan, so
     one compiled program covers n chunks of prefill (the serving executor
-    compiles one such program per power-of-two n).  Returns caches.
+    compiles one such program per scan length n).  Returns caches.
+
+    ``valid_lens`` (optional (n,) int32): per-chunk valid-token counts for
+    ragged prompts padded into the fixed (n, C) layout — a chunk with
+    valid_lens[i] == 0 is a pure no-op on the caches, so one scan shape
+    covers any number of trailing placeholder chunks.
     """
     xs = tokens if tokens is not None else embeds
     xs = jnp.moveaxis(xs, 1, 0)                    # (n, B, C[, d])
+    if valid_lens is not None:
+        xs = (xs, jnp.asarray(valid_lens, jnp.int32))
 
-    def body(caches, chunk):
+    def body(caches, inp):
+        chunk, vl = inp if valid_lens is not None else (inp, None)
         if tokens is not None:
             _, caches = prefill_chunk(params, cfg, caches, tokens=chunk,
-                                      dp_axes=dp_axes)
+                                      dp_axes=dp_axes, valid_len=vl)
         else:
             _, caches = prefill_chunk(params, cfg, caches, embeds=chunk,
-                                      dp_axes=dp_axes)
+                                      dp_axes=dp_axes, valid_len=vl)
         return caches, None
 
     caches, _ = jax.lax.scan(body, caches, xs)
@@ -321,7 +338,7 @@ def prefill_chunk_scan(params, cfg: ArchConfig, caches, tokens=None,
 
 
 def prefill_sample(params, cfg: ArchConfig, caches, sampler, sample_fn,
-                   tokens=None, embeds=None, dp_axes=None):
+                   tokens=None, embeds=None, dp_axes=None, valid_len=None):
     """Final prompt chunk with the fused admit head: one dispatch computes
     the chunk, the last-token logits and the first sampled token, and
     advances the sampler state (key split, budget decrement, EOS/budget
@@ -329,11 +346,19 @@ def prefill_sample(params, cfg: ArchConfig, caches, sampler, sample_fn,
 
     ``sampler``/``sample_fn`` as in ``decode_steps`` (the serving executor
     passes a 1-row ``repro.serving.sampling`` state and its ``sample``).
+    ``valid_len`` marks a ragged final chunk: the admit logits come from
+    the last *valid* position, not the last row of the padded chunk.
     Returns (token (B,), sampler, caches).
     """
     x, caches = prefill_chunk(params, cfg, caches, tokens=tokens,
-                              embeds=embeds, dp_axes=dp_axes)
-    h = layers.rmsnorm_fwd(params["final_norm"], x[:, -1], cfg.norm_eps)
+                              embeds=embeds, dp_axes=dp_axes,
+                              valid_len=valid_len)
+    if valid_len is None:
+        h_last = x[:, -1]
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1,
+                                              axis=1)[:, 0]
+    h = layers.rmsnorm_fwd(params["final_norm"], h_last, cfg.norm_eps)
     tok, sampler = sample_fn(sampler, _logits(params, cfg, h))
     return tok.astype(jnp.int32), sampler, caches
 

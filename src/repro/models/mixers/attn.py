@@ -19,6 +19,7 @@ def _head_mask(cfg):
 class Attention(SequenceMixer):
     kind = "attn"
     is_attention = True
+    supports_ragged_prefill = True
     quadratic = True           # O(T) KV — no fixed-size persistent state
     state_passes = 0
 
@@ -46,13 +47,16 @@ class Attention(SequenceMixer):
                                       head_mask=_head_mask(cfg))
 
     @classmethod
-    def prefill_chunk(cls, params, cfg, x, cache):
+    def prefill_chunk(cls, params, cfg, x, cache, valid_len=None):
         # positions and visibility continue from cache.length (the base-class
-        # default would restart RoPE at 0 and drop the cached KV)
+        # default would restart RoPE at 0 and drop the cached KV); ragged
+        # chunks skip the rolling insert of padded positions and advance
+        # length by valid_len only
         return attention.attn_prefill_chunk(params, x, cache,
                                             rope_theta=cfg.rope_theta,
                                             window=cls._window(cfg),
-                                            head_mask=_head_mask(cfg))
+                                            head_mask=_head_mask(cfg),
+                                            valid_len=valid_len)
 
     @classmethod
     def decode(cls, params, cfg, x_t, cache):

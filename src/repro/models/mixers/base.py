@@ -114,6 +114,13 @@ class SequenceMixer:
     is_attention: bool = False
     quadratic: bool = False
     state_passes: int = 2          # naive backend: 1 read + 1 write
+    # declarative capability: True iff prefill_chunk implements the
+    # per-token validity mask (ragged fixed-size chunks).  The serving
+    # executor's masked planner requires it from every kind in the
+    # pattern and falls back to pow2 tail plans otherwise — a kind
+    # registered without masking still serves, it just pays the larger
+    # compile cache.
+    supports_ragged_prefill: bool = False
 
     @classmethod
     def init_params(cls, key, cfg, dtype):
@@ -128,7 +135,7 @@ class SequenceMixer:
         raise NotImplementedError(cls.kind)
 
     @classmethod
-    def prefill_chunk(cls, params, cfg, x, cache):
+    def prefill_chunk(cls, params, cfg, x, cache, valid_len=None):
         """Process one prompt chunk *continuing from* ``cache`` (the serving
         engine's chunked/overlapped prefill calls this once per chunk).
 
@@ -138,7 +145,20 @@ class SequenceMixer:
         prefill depends on absolute position or ignores the incoming cache
         (RoPE attention over a KV cache) must override this to continue at
         the cached position.
+
+        ``valid_len`` (optional scalar int32) marks a *ragged* chunk padded
+        to its static size: only the first valid_len tokens are real.  An
+        implementation must leave the cache exactly as if only the valid
+        prefix had been processed (padded output rows may be garbage).
+        Every built-in kind supports it; the default implementation cannot
+        (plain ``prefill`` would fold padding into the state), so masked
+        chunks are rejected here rather than silently corrupting state.
         """
+        if valid_len is not None:
+            raise NotImplementedError(
+                f"mixer kind {cls.kind!r} does not support ragged "
+                f"(valid_len-masked) prefill chunks — override "
+                f"prefill_chunk to mask padded positions")
         return cls.prefill(params, cfg, x, cache)
 
     @classmethod

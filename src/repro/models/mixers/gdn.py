@@ -12,6 +12,7 @@ from repro.models.mixers.base import ArraySpec, CacheSpec, SequenceMixer
 @register
 class GatedDeltaNet(SequenceMixer):
     kind = "gdn"
+    supports_ragged_prefill = True
     state_passes = 2           # fused Alg. 2: one read + one write pass
     fused = True               # decode algorithm (Alg. 2 vs Alg. 1)
 
@@ -28,6 +29,14 @@ class GatedDeltaNet(SequenceMixer):
     def prefill(cls, params, cfg, x, cache):
         return gdn_layer.gdn_prefill(params, x, cache,
                                      use_pallas=cfg.use_pallas_serving)
+
+    @classmethod
+    def prefill_chunk(cls, params, cfg, x, cache, valid_len=None):
+        # state-resuming prefill + ragged masking (padded tokens are an
+        # exact no-op on S inside the kernel / pre-masked on the XLA path)
+        return gdn_layer.gdn_prefill(params, x, cache,
+                                     use_pallas=cfg.use_pallas_serving,
+                                     valid_len=valid_len)
 
     @classmethod
     def decode(cls, params, cfg, x_t, cache):

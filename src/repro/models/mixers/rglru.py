@@ -14,6 +14,7 @@ _CONV_W = rglru_layer.CONV_WIDTH
 @register
 class RGLRU(SequenceMixer):
     kind = "rglru"
+    supports_ragged_prefill = True
     state_passes = 2           # h <- a*h + b : one read + one write
 
     @classmethod
@@ -28,6 +29,13 @@ class RGLRU(SequenceMixer):
     @classmethod
     def prefill(cls, params, cfg, x, cache):
         return rglru_layer.rglru_prefill(params, x, cache)
+
+    @classmethod
+    def prefill_chunk(cls, params, cfg, x, cache, valid_len=None):
+        # ragged chunks: padded gates forced to identity, conv carry
+        # sliced at the valid boundary
+        return rglru_layer.rglru_prefill(params, x, cache,
+                                         valid_len=valid_len)
 
     @classmethod
     def decode(cls, params, cfg, x_t, cache):

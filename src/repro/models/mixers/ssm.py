@@ -13,6 +13,7 @@ _CONV_W = ssm_layer.CONV_WIDTH
 @register
 class SSD(SequenceMixer):
     kind = "ssm"
+    supports_ragged_prefill = True
     state_passes = 2           # S <- g*S + B x^T : one read + one write
 
     @classmethod
@@ -34,6 +35,17 @@ class SSD(SequenceMixer):
                                      headdim=cfg.ssm_headdim,
                                      d_state=cfg.ssm_d_state,
                                      use_pallas=cfg.use_pallas_serving)
+
+    @classmethod
+    def prefill_chunk(cls, params, cfg, x, cache, valid_len=None):
+        # ragged chunks: S masked in the kernel / pre-masked inputs, conv
+        # carries sliced at the valid boundary
+        return ssm_layer.ssm_prefill(params, x, cache,
+                                     d_inner=cfg.ssm_d_inner,
+                                     headdim=cfg.ssm_headdim,
+                                     d_state=cfg.ssm_d_state,
+                                     use_pallas=cfg.use_pallas_serving,
+                                     valid_len=valid_len)
 
     @classmethod
     def decode(cls, params, cfg, x_t, cache):

@@ -86,15 +86,27 @@ def rglru_train(p, x):
     return layers.dot(out, p["out"])
 
 
-def rglru_prefill(p, x, state: RGLRUState):
+def rglru_prefill(p, x, state: RGLRUState, valid_len=None):
+    """``valid_len`` (optional scalar int32): positions >= valid_len are
+    padding — their gates are forced to the identity (log_a = 0, input 0)
+    so the carried h and the conv carry are exactly those after the valid
+    prefix (padded output rows are garbage; callers ignore them)."""
     B, T, _ = x.shape
     xb = layers.dot(x, p["in_x"])
     yb = jax.nn.gelu(layers.dot(x, p["in_y"]).astype(jnp.float32))
     conv_w = p["conv"]["w"].shape[0]
     full = jnp.concatenate([state.conv.astype(xb.dtype), xb], axis=1)
-    new_conv = full[:, -(conv_w - 1):, :]
+    if valid_len is None:
+        new_conv = full[:, -(conv_w - 1):, :]
+    else:
+        new_conv = jax.lax.dynamic_slice_in_dim(full, valid_len,
+                                                conv_w - 1, axis=1)
     xb = layers.conv1d_fwd(p["conv"], full)[:, -T:, :]
     log_a, gated = _gates(p, xb)
+    if valid_len is not None:
+        vm = (jnp.arange(T) < valid_len)[None, :, None]
+        log_a = jnp.where(vm, log_a, jnp.zeros_like(log_a))   # a = 1
+        gated = jnp.where(vm, gated, jnp.zeros_like(gated))   # b = 0
     h = _scan_rglru(log_a, gated, state.h)
     out = (h * yb).astype(x.dtype)
     return layers.dot(out, p["out"]), RGLRUState(

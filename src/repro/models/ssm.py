@@ -99,34 +99,54 @@ def ssm_train(p, x, *, d_inner, headdim, d_state, chunk=64):
     return _out(p, O.astype(x.dtype), z, xh, x.dtype)
 
 
-def _conv_prefill(conv_p, u, cache):
-    """Seeded causal conv; returns (activated output, new cache tail)."""
+def _conv_prefill(conv_p, u, cache, valid_len=None):
+    """Seeded causal conv; returns (activated output, new cache tail).
+
+    With ``valid_len`` set, the returned carry is the last ``w - 1``
+    *valid* inputs (rows ``[valid_len, valid_len + w - 1)`` of
+    cache‖u) — the carry serial decode would hold after the valid
+    prefix, not the padded garbage at the block's end.
+    """
     T = u.shape[1]
     w = conv_p["w"].shape[0]
     full = jnp.concatenate([cache.astype(u.dtype), u], axis=1)
     out = layers.conv1d_fwd(conv_p, full)[:, -T:, :]
-    return _silu(out), full[:, -(w - 1):, :]
+    if valid_len is None:
+        tail = full[:, -(w - 1):, :]
+    else:
+        tail = jax.lax.dynamic_slice_in_dim(full, valid_len, w - 1, axis=1)
+    return _silu(out), tail
 
 
 def ssm_prefill(p, x, state: SSMState, *, d_inner, headdim, d_state,
-                chunk=64, use_pallas=False):
+                chunk=64, use_pallas=False, valid_len=None):
     B, T, _ = x.shape
     z = layers.dot(x, p["w_z"])
-    xi, cx = _conv_prefill(p["conv_x"], layers.dot(x, p["w_x"]), state.conv_x)
-    Bi, cB = _conv_prefill(p["conv_B"], layers.dot(x, p["w_B"]), state.conv_B)
-    Ci, cC = _conv_prefill(p["conv_C"], layers.dot(x, p["w_C"]), state.conv_C)
+    xi, cx = _conv_prefill(p["conv_x"], layers.dot(x, p["w_x"]),
+                           state.conv_x, valid_len)
+    Bi, cB = _conv_prefill(p["conv_B"], layers.dot(x, p["w_B"]),
+                           state.conv_B, valid_len)
+    Ci, cC = _conv_prefill(p["conv_C"], layers.dot(x, p["w_C"]),
+                           state.conv_C, valid_len)
     dt = layers.dot(x, p["w_dt"])
     xh, v, log_g = _ssd_terms(p, xi, Bi, Ci, dt, headdim)
+    ones = jnp.ones_like(log_g)
     if use_pallas:
         from repro.kernels import ops
         O, S = ops.gdn_prefill(
             Ci[:, :, None, :], Bi[:, :, None, :], v, log_g,
-            jnp.ones_like(log_g), state.S, chunk=chunk, delta_rule=False)
+            ones, state.S, chunk=chunk, delta_rule=False,
+            valid_len=valid_len)
     else:
+        Bk, vk, log_gk = Bi[:, :, None, :], v, log_g
+        if valid_len is not None:
+            from repro.models.gdn_layer import mask_ragged_inputs
+            Bk, vk, log_gk, ones = mask_ragged_inputs(valid_len, Bk, vk,
+                                                      log_gk, ones)
         O, S = gdn_core.gdn_prefill(
             Ci[:, :, None, :].astype(jnp.float32),
-            Bi[:, :, None, :].astype(jnp.float32),
-            v.astype(jnp.float32), log_g, jnp.ones_like(log_g),
+            Bk.astype(jnp.float32),
+            vk.astype(jnp.float32), log_gk, ones,
             state.S.astype(jnp.float32), chunk=chunk, delta_rule=False)
         S = S.astype(state.S.dtype)
     out = _out(p, O.astype(x.dtype), z, xh, x.dtype)

@@ -23,7 +23,11 @@ per-mesh engines (placement, rebalance/drain, aggregated metrics).
 (``submit`` / ``step`` / ``run_until_done`` / ``metrics``) is unchanged,
 with keyword knobs — ``overlap`` (chunked prefill staged while resident
 slots decode; default on), ``prefill_chunk`` (chunk size),
-``budget_ticks`` (budget-aware tick length; default on), ``mesh`` (a
+``plan_mode`` ("masked" default: one scan shape + one fixed-size
+``valid_len``-masked tail per prompt, ≤ 2 prefill program shapes;
+"pow2": the power-of-two tail baseline — token streams are identical
+across modes, only the compile cache moves), ``budget_ticks``
+(budget-aware tick length; default on), ``mesh`` (a
 ``("data", "model")`` device mesh; default single-device) and
 ``staging_depth`` (ahead-of-slot prefills outstanding under saturation;
 default 2).  ``overlap``, ``budget_ticks``, ``staging_depth`` and the

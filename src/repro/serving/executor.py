@@ -19,18 +19,28 @@ touches an accelerator buffer lives here; everything that touches a
       program per bucketed tick length k (budget-aware ticks pick the
       smallest bucket covering the max remaining per-slot budget);
     - ``stage_chunk_scan`` / ``stage_chunk`` / ``stage_admit``: chunked
-      prefill into a staging cache — full chunks of ``prefill_chunk``
-      tokens run m-at-a-time under one ``lax.scan`` (one program per
-      power-of-two m), the ragged tail is decomposed into power-of-two
-      sub-chunks (one program per size), and the final sub-chunk fuses the
-      first-token draw on device (``lm.prefill_sample``), so admit never
-      ships logits to the host; ring buffers share programs (same shapes);
+      prefill into a staging cache.  Under the default **masked planner**
+      (``plan_mode="masked"``) a prompt dispatches at most TWO distinct
+      program shapes: full chunks run m-at-a-time under one ``lax.scan``
+      (one m per prompt, trailing slots masked out with per-chunk
+      ``valid_len`` = 0), and the ragged tail is ONE fixed-size
+      ``prefill_chunk``-sized chunk whose padded positions are masked by
+      the per-token validity threading (kernels zero k/v/β/log-gate, the
+      rolling KV insert drops padded slots) — the final state is provably
+      that of the unpadded prompt, and the admit draw reads the logits of
+      the last *valid* token.  ``plan_mode="pow2"`` keeps the PR-3
+      power-of-two tail decomposition (no padding, no masking) as the
+      comparison baseline.  The tail/admit program fuses the first-token
+      draw on device (``lm.prefill_sample``), so admit never ships logits
+      to the host; ring buffers share programs (same shapes);
     - ``scatter(slot, buf)``: one donated ``dynamic_update_slice`` over
       the whole staging pytree + sampler row + first token into ``slot``.
 
   Every program is compiled lazily on first use and cached by its static
-  shape, so the compile-cache size is bounded by the bucketing: O(log)
-  distinct chunk/scan sizes and O(log) tick lengths.
+  shape; ``compiled_programs()`` reports the live cache per family.  The
+  masked planner bounds the prefill families at O(1) shapes per prompt
+  (≤ _MAX_SCAN_CHUNKS scan lengths + 1 admit shape ever); the pow2
+  baseline needs O(log chunk) tail programs on top.
 
 **Mesh sharding.**  With ``mesh`` set (a ``("data", "model")`` device
 mesh, see ``launch/mesh.py``), every buffer above is allocated with a
@@ -48,7 +58,7 @@ their placement across ticks.
 from __future__ import annotations
 
 import warnings
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,12 +69,32 @@ from repro.configs.base import ArchConfig
 from repro.models import lm
 from repro.serving import sampling
 
-PlanStep = Tuple[str, int]   # ("scan", m chunks) | ("chunk"|"admit", s tokens)
+
+class PlanStep(NamedTuple):
+    """One prefill dispatch.
+
+    kind   : "scan" (m full chunks under one lax.scan) | "chunk" (one
+             interior tail sub-chunk, pow2 mode only) | "admit" (final
+             chunk + fused first-token draw).
+    size   : the program's static shape — chunk count m for "scan",
+             token count for "chunk"/"admit".
+    tokens : valid prompt tokens consumed by this step (== the slice the
+             scheduler feeds it; < the program capacity when masked).
+    valid  : per-token validity threaded into the programs — "scan": an
+             (m,)-tuple of per-chunk valid lengths (trailing 0-entries
+             are placeholder chunks), "admit": the valid token count of
+             the fixed-size tail; None = unmasked (pow2 baseline).
+    """
+    kind: str
+    size: int
+    tokens: int
+    valid: Optional[Any] = None
+
 
 # cap on chunks per scan dispatch: a single scan step is one program on the
 # tick thread, so unbounded m would stall resident decode slots for nearly
-# the whole prompt — bounding it keeps the overlap granular (and shrinks
-# the compile cache to scan programs of m in {1, 2, 4})
+# the whole prompt — bounding it keeps the overlap granular (and bounds
+# the compile cache to scan programs of m in 1..4)
 _MAX_SCAN_CHUNKS = 4
 
 
@@ -95,20 +125,58 @@ class DeviceExecutor:
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int,
                  max_len: int, decode_block: int, prefill_chunk: int = 16,
-                 mesh: Optional[Mesh] = None, staging_depth: int = 2):
+                 mesh: Optional[Mesh] = None, staging_depth: int = 2,
+                 plan_mode: str = "masked"):
         if staging_depth < 1:
             raise ValueError(
                 f"staging_depth must be >= 1, got {staging_depth}")
+        if plan_mode not in ("masked", "pow2"):
+            raise ValueError(f"plan_mode must be 'masked' or 'pow2', "
+                             f"got {plan_mode!r}")
+        # explicit validation — prefill_chunk is any size >= 1 (the masked
+        # planner never assumes a power of two), but it must fit the
+        # context buffers: a silently-clamped over-long chunk would hide a
+        # misconfiguration
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if prefill_chunk > max_len:
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} exceeds max_len={max_len}: "
+                f"a prefill chunk can never hold more tokens than the "
+                f"context buffers — lower prefill_chunk or raise max_len")
+        if plan_mode == "masked":
+            # masked plans need every mixer kind in the pattern to
+            # implement the per-token validity mask; a kind registered
+            # without it (third-party mixers) still serves — it just
+            # falls back to the pow2 tail plans and pays the larger
+            # compile cache
+            from repro.models.mixers import get_mixer
+            unsupported = sorted({k for k in cfg.pattern
+                                  if not get_mixer(k)
+                                  .supports_ragged_prefill})
+            if unsupported:
+                warnings.warn(
+                    f"mixer kind(s) {unsupported} do not implement "
+                    f"ragged (valid_len-masked) prefill chunks — falling "
+                    f"back to plan_mode='pow2'; set "
+                    f"supports_ragged_prefill = True after masking "
+                    f"prefill_chunk to get fixed-shape plans",
+                    RuntimeWarning)
+                plan_mode = "pow2"
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
         self.decode_block = decode_block
         self.mesh = mesh
         self.staging_depth = staging_depth
+        self.plan_mode = plan_mode
         # chunks scatter into rolling KV buffers, whose size is
-        # min(window, max_len) — one chunk must not wrap a buffer
+        # min(window, max_len) — one chunk must not wrap a buffer, so the
+        # chunk is clamped to the smallest rolling window (documented
+        # invariant of attn_prefill_chunk, checked there too)
         limit = min(max_len, cfg.window) if cfg.window else max_len
-        self.prefill_chunk = max(1, min(prefill_chunk, limit))
+        self.prefill_chunk = min(prefill_chunk, limit)
 
         # spec-driven slot buffers: shapes, dtypes and byte budgets all
         # come from the mixers' declarative cache specs
@@ -140,10 +208,12 @@ class DeviceExecutor:
         self.staging_tok: List[Optional[jax.Array]] = [None] * staging_depth
 
         # lazily-built program caches, keyed by static shape
+        # (+ masked flag for the prefill families — a masked program takes
+        # the validity array as an extra operand)
         self._decode_p: Dict[int, object] = {}
-        self._scan_p: Dict[Tuple[int, bool], object] = {}
+        self._scan_p: Dict[Tuple[int, bool, bool], object] = {}
         self._chunk_p: Dict[Tuple[int, bool], object] = {}
-        self._admit_p: Dict[Tuple[int, bool], object] = {}
+        self._admit_p: Dict[Tuple[int, bool, bool], object] = {}
         # donate only the slot buffers: the staging pytree's (repeats, 1,
         # ...) leaves have no same-shape output to alias (XLA would warn)
         self._scatter_p = self._jit(
@@ -218,15 +288,23 @@ class DeviceExecutor:
     def plan_prefill(self, length: int) -> List[PlanStep]:
         """Decompose a prompt of ``length`` tokens into dispatch steps.
 
-        Full ``prefill_chunk``-size chunks run m-at-a-time under the scan
-        program, m a power of two capped at ``_MAX_SCAN_CHUNKS`` (each
-        program is compiled once ever, and no single dispatch holds the
-        tick thread for more than that many chunks); the ragged tail
-        (always >= 1 token, so the final logits always come from a tail
-        step) is decomposed into power-of-two sub-chunks, the last of
-        which is the fused-sample admit program.  Retraces are bounded by
-        the bucketing: at most 3 scan programs + 2 log2(chunk) tail
-        programs.
+        **masked** (default): at most TWO distinct program shapes per
+        prompt.  Full chunks run under ONE scan shape m = the balanced
+        chunk count ≤ ``_MAX_SCAN_CHUNKS`` (the last dispatch pads with
+        valid_len = 0 placeholder chunks — exact no-ops on the caches),
+        and the ragged tail is ONE fixed-size masked admit chunk (its
+        padded positions carry valid_len, so the admit logits come from
+        the last real token).  The compile cache is bounded at
+        ``_MAX_SCAN_CHUNKS`` scan shapes + 1 admit shape *total across
+        all prompt lengths*.
+
+        **pow2** (baseline): the PR-3 decomposition — power-of-two scan
+        counts, power-of-two unmasked tail sub-chunks, the last being the
+        fused-sample admit.  No padding, but O(log chunk) tail programs.
+
+        Both planners dispatch the same valid tokens through the same
+        per-chunk math, so token streams agree (pinned by
+        ``tests/test_ragged_prefill.py``).
         """
         if length < 1:
             raise ValueError(f"cannot prefill an empty prompt ({length})")
@@ -234,15 +312,32 @@ class DeviceExecutor:
         tail = (length - 1) % C + 1
         n_full = (length - tail) // C
         steps: List[PlanStep] = []
-        while n_full:
-            m = min(_pow2_floor(n_full), _MAX_SCAN_CHUNKS)
-            steps.append(("scan", m))
-            n_full -= m
-        while tail:
-            s = _pow2_floor(tail)
-            steps.append(("chunk", s))
-            tail -= s
-        steps[-1] = ("admit", steps[-1][1])
+        if self.plan_mode == "pow2":
+            while n_full:
+                m = min(_pow2_floor(n_full), _MAX_SCAN_CHUNKS)
+                steps.append(PlanStep("scan", m, m * C))
+                n_full -= m
+            while tail:
+                s = _pow2_floor(tail)
+                steps.append(PlanStep("chunk", s, s))
+                tail -= s
+            last = steps[-1]
+            steps[-1] = PlanStep("admit", last.size, last.tokens)
+            return steps
+        if n_full:
+            # one scan shape per prompt: the balanced chunk count needs
+            # the fewest placeholder chunks for the dispatch count the
+            # _MAX_SCAN_CHUNKS cap forces (e.g. 5 full chunks -> two
+            # dispatches of m=3, one placeholder, not 4+1)
+            n_disp = -(-n_full // _MAX_SCAN_CHUNKS)
+            m = -(-n_full // n_disp)
+            left = n_full
+            for _ in range(n_disp):
+                r = min(left, m)
+                steps.append(PlanStep("scan", m, r * C,
+                                      (C,) * r + (0,) * (m - r)))
+                left -= r
+        steps.append(PlanStep("admit", C, tail, tail))
         return steps
 
     # ----------------------------------------------------------- staging
@@ -265,36 +360,64 @@ class DeviceExecutor:
         self.staging_row[buf] = None
         self.staging_tok[buf] = None
 
-    def _as_chunk(self, chunk, lead_shape):
+    def _as_chunk(self, chunk, lead_shape, pad_to: int = 0):
         """Flat prompt slice -> device chunk.  (n,) int tokens or (n, d)
-        float embeds (the stub VLM/audio frontends), reshaped to the
+        float embeds (the stub VLM/audio frontends), zero-padded to
+        ``pad_to`` tokens when the slice is ragged, reshaped to the
         program's chunk layout."""
         chunk = np.asarray(chunk)
+        if pad_to > chunk.shape[0]:
+            pad = np.zeros((pad_to - chunk.shape[0],) + chunk.shape[1:],
+                           chunk.dtype)
+            chunk = np.concatenate([chunk, pad])
         if chunk.dtype.kind == "f":
             x = jnp.asarray(chunk, jnp.dtype(self.cfg.act_dtype))
             return x.reshape(*lead_shape, x.shape[-1]), True
         return jnp.asarray(chunk, jnp.int32).reshape(lead_shape), False
 
-    def stage_chunk_scan(self, buf: int, chunks):
-        """Advance ring buffer ``buf`` by m full chunks in one dispatch.
-        chunks: flat (m * C,) tokens or (m * C, d) embeds."""
-        m = len(chunks) // self.prefill_chunk
-        x, is_embeds = self._as_chunk(chunks, (1, m, self.prefill_chunk))
-        prog = self._scan_p.get((m, is_embeds))
+    def stage_chunk_scan(self, buf: int, chunks, valid_lens=None):
+        """Advance ring buffer ``buf`` by m chunks in one dispatch.
+
+        chunks: flat tokens (or (n, d) embeds) — m * C of them unmasked,
+        or ``sum(valid_lens)`` for a masked dispatch (``valid_lens`` an
+        (m,)-tuple of per-chunk valid counts; the slice is zero-padded
+        into the fixed (m, C) layout and each chunk's padding is masked
+        by the per-token validity threading — a 0-entry is a placeholder
+        chunk that leaves the caches untouched)."""
+        C = self.prefill_chunk
+        masked = valid_lens is not None
+        m = len(valid_lens) if masked else len(chunks) // C
+        x, is_embeds = self._as_chunk(chunks, (1, m, C),
+                                      pad_to=m * C if masked else 0)
+        prog = self._scan_p.get((m, is_embeds, masked))
         if prog is None:
             kw = "embeds" if is_embeds else "tokens"
-            prog = self._jit(
-                lambda p, t, c, kw=kw: lm.prefill_chunk_scan(
-                    p, self.cfg, c, **{kw: t}),
-                donate=(2,),
-                in_sh=(self._sh_params, self._sh_rep, self._sh_staging),
-                out_sh=self._sh_staging)
-            self._scan_p[(m, is_embeds)] = prog
-        self.staging[buf] = prog(self.params, x, self.staging[buf])
+            if masked:
+                prog = self._jit(
+                    lambda p, t, vl, c, kw=kw: lm.prefill_chunk_scan(
+                        p, self.cfg, c, valid_lens=vl, **{kw: t}),
+                    donate=(3,),
+                    in_sh=(self._sh_params, self._sh_rep, self._sh_rep,
+                           self._sh_staging),
+                    out_sh=self._sh_staging)
+            else:
+                prog = self._jit(
+                    lambda p, t, c, kw=kw: lm.prefill_chunk_scan(
+                        p, self.cfg, c, **{kw: t}),
+                    donate=(2,),
+                    in_sh=(self._sh_params, self._sh_rep, self._sh_staging),
+                    out_sh=self._sh_staging)
+            self._scan_p[(m, is_embeds, masked)] = prog
+        if masked:
+            vl = jnp.asarray(np.asarray(valid_lens, np.int32))
+            self.staging[buf] = prog(self.params, x, vl, self.staging[buf])
+        else:
+            self.staging[buf] = prog(self.params, x, self.staging[buf])
 
     def stage_chunk(self, buf: int, chunk):
         """Advance ring buffer ``buf`` by one interior tail sub-chunk
-        (no logits)."""
+        (no logits; pow2 plans only — the masked planner's tail is a
+        single fixed-size admit chunk)."""
         s = len(chunk)
         x, is_embeds = self._as_chunk(chunk, (1, s))
         prog = self._chunk_p.get((s, is_embeds))
@@ -309,36 +432,56 @@ class DeviceExecutor:
             self._chunk_p[(s, is_embeds)] = prog
         self.staging[buf] = prog(self.params, x, self.staging[buf])
 
-    def stage_admit(self, buf: int, chunk) -> jax.Array:
-        """Final sub-chunk + fused on-device first-token draw: one dispatch
+    def stage_admit(self, buf: int, chunk, valid_len=None) -> jax.Array:
+        """Final chunk + fused on-device first-token draw: one dispatch
         builds the request's sampler row (``sampling.admit_row``), prefills
         the chunk, samples the first token and advances the row (key split,
         budget decrement, EOS/budget done flag).  Returns the (1,) token
         array (still on device — the scheduler syncs it when it stamps
-        TTFT) and leaves the advanced row for the slot scatter."""
-        s = len(chunk)
-        x, is_embeds = self._as_chunk(chunk, (1, s))
-        prog = self._admit_p.get((s, is_embeds))
+        TTFT) and leaves the advanced row for the slot scatter.
+
+        With ``valid_len`` set the chunk is the masked planner's
+        fixed-size tail: the slice is zero-padded to ``prefill_chunk``
+        tokens and the programs read the admit logits from the last
+        *valid* position."""
+        masked = valid_len is not None
+        s = self.prefill_chunk if masked else len(chunk)
+        x, is_embeds = self._as_chunk(chunk, (1, s),
+                                      pad_to=s if masked else 0)
+        prog = self._admit_p.get((s, is_embeds, masked))
         if prog is None:
             kw = "embeds" if is_embeds else "tokens"
 
-            def _admit(p, t, c, seed, rid, temp, top_k, top_p, eos, budget,
-                       kw=kw):
-                row = sampling.admit_row(seed, rid, temp, top_k, top_p,
-                                         eos, budget)
-                return lm.prefill_sample(p, self.cfg, c, row,
-                                         sampling.sample, **{kw: t})
+            if masked:
+                def _admit(p, t, c, vl, seed, rid, temp, top_k, top_p,
+                           eos, budget, kw=kw):
+                    row = sampling.admit_row(seed, rid, temp, top_k, top_p,
+                                             eos, budget)
+                    return lm.prefill_sample(p, self.cfg, c, row,
+                                             sampling.sample, valid_len=vl,
+                                             **{kw: t})
+                n_rep = 8
+            else:
+                def _admit(p, t, c, seed, rid, temp, top_k, top_p, eos,
+                           budget, kw=kw):
+                    row = sampling.admit_row(seed, rid, temp, top_k, top_p,
+                                             eos, budget)
+                    return lm.prefill_sample(p, self.cfg, c, row,
+                                             sampling.sample, **{kw: t})
+                n_rep = 7
 
             prog = self._jit(
                 _admit, donate=(2,),
                 in_sh=((self._sh_params, self._sh_rep, self._sh_staging)
-                       + self._rep_sh(7) if self.mesh is not None else None),
+                       + self._rep_sh(n_rep)
+                       if self.mesh is not None else None),
                 out_sh=((self._sh_rep, self._sh_row, self._sh_staging)
                         if self.mesh is not None else None))
-            self._admit_p[(s, is_embeds)] = prog
+            self._admit_p[(s, is_embeds, masked)] = prog
+        extra = ((np.int32(valid_len),) if masked else ())
         self.staging_tok[buf], self.staging_row[buf], self.staging[buf] = \
             prog(self.params, x, self.staging[buf],
-                 *self._staging_args[buf])
+                 *extra, *self._staging_args[buf])
         return self.staging_tok[buf]
 
     def scatter(self, slot: int, buf: int):
@@ -352,6 +495,28 @@ class DeviceExecutor:
         self._staging_clean[buf] = True
         self.staging_row[buf] = None
         self.staging_tok[buf] = None
+
+    # ----------------------------------------------------------- metrics
+    def compiled_programs(self) -> Dict[str, int]:
+        """Live jitted-program cache sizes per family.
+
+        This is the observable the masked planner exists for: with
+        ``plan_mode="masked"`` the prefill families stay at ≤
+        ``_MAX_SCAN_CHUNKS`` scan shapes + 1 admit shape across *all*
+        prompt lengths (and ≤ 2 shapes are ever dispatched for any single
+        prompt); the pow2 baseline grows O(log chunk) tail programs on
+        top.  Asserted by ``tests/test_ragged_prefill.py`` and reported
+        through ``Scheduler.metrics()``."""
+        prefill = (len(self._scan_p) + len(self._chunk_p)
+                   + len(self._admit_p))
+        return {
+            "decode": len(self._decode_p),
+            "prefill_scan": len(self._scan_p),
+            "prefill_chunk": len(self._chunk_p),
+            "prefill_admit": len(self._admit_p),
+            "prefill": prefill,
+            "total": len(self._decode_p) + prefill + 1,   # + slot scatter
+        }
 
     # ------------------------------------------------------------- ticks
     def decode(self, k: int):

@@ -206,6 +206,7 @@ class Router:
             "decode_s": decode_s,
             "decode_us_per_token": decode_s / max(1, decoded) * 1e6,
             "stage_dispatches": sum(m["stage_dispatches"] for m in per),
+            "compiled_programs": sum(m["compiled_programs"] for m in per),
             "mean_ttft_s": wmean("mean_ttft_s"),
             "mean_latency_s": wmean("mean_latency_s"),
             "mean_tokens_per_s": wmean("mean_tokens_per_s"),

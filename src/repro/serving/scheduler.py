@@ -121,7 +121,7 @@ class Scheduler:
                  max_len: int = 256, seed: int = 0, decode_block: int = 1,
                  overlap: bool = True, prefill_chunk: int = 16,
                  budget_ticks: bool = True, mesh=None,
-                 staging_depth: int = 2):
+                 staging_depth: int = 2, plan_mode: str = "masked"):
         if decode_block < 1:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
         self.cfg = cfg
@@ -135,7 +135,7 @@ class Scheduler:
         self.executor = DeviceExecutor(
             cfg, params, max_slots=max_slots, max_len=max_len,
             decode_block=decode_block, prefill_chunk=prefill_chunk,
-            mesh=mesh, staging_depth=staging_depth)
+            mesh=mesh, staging_depth=staging_depth, plan_mode=plan_mode)
         self.free: Deque[int] = deque(range(max_slots))
         self.active: Dict[int, Request] = {}
         self.queue: Deque[Request] = deque()
@@ -158,6 +158,10 @@ class Scheduler:
     @property
     def prefill_chunk(self) -> int:
         return self.executor.prefill_chunk
+
+    @property
+    def plan_mode(self) -> str:
+        return self.executor.plan_mode
 
     @property
     def staging_depth(self) -> int:
@@ -274,17 +278,16 @@ class Scheduler:
             budget=req.max_new_tokens)
 
     def _stage_dispatch_one(self, st: _Staging):
-        kind, n = st.plan[st.plan_pos]
-        inputs = st.req._inputs
-        size = n * self.executor.prefill_chunk if kind == "scan" else n
-        chunk = inputs[st.prompt_pos:st.prompt_pos + size]
-        if kind == "scan":
-            self.executor.stage_chunk_scan(st.buf, chunk)
-        elif kind == "chunk":
+        step = st.plan[st.plan_pos]
+        chunk = st.req._inputs[st.prompt_pos:st.prompt_pos + step.tokens]
+        if step.kind == "scan":
+            self.executor.stage_chunk_scan(st.buf, chunk,
+                                           valid_lens=step.valid)
+        elif step.kind == "chunk":
             self.executor.stage_chunk(st.buf, chunk)
         else:
-            self.executor.stage_admit(st.buf, chunk)
-        st.prompt_pos += size
+            self.executor.stage_admit(st.buf, chunk, valid_len=step.valid)
+        st.prompt_pos += step.tokens
         st.plan_pos += 1
         self.stage_dispatches += 1
 
@@ -430,6 +433,7 @@ class Scheduler:
         lats = [r.latency_s for r in done if r.latency_s is not None]
         tps = [r.tokens_per_s for r in done if r.tokens_per_s is not None]
         mesh = self.executor.mesh
+        progs = self.executor.compiled_programs()
         return {
             "requests": len(done),
             "tokens": sum(len(r.output) for r in done),
@@ -442,6 +446,9 @@ class Scheduler:
             "stage_dispatches": self.stage_dispatches,
             "overlap": int(self.overlap),
             "prefill_chunk": self.executor.prefill_chunk,
+            "plan_mode": self.executor.plan_mode,
+            "compiled_programs": progs["total"],
+            "prefill_programs": progs["prefill"],
             "staging_depth": self.staging_depth,
             "mesh_data": int(mesh.shape["data"]) if mesh is not None else 1,
             "mesh_model": (int(mesh.shape["model"])

@@ -5,6 +5,8 @@ on-device first-token sample, budget-aware tick lengths) must move *when*
 work happens, never *what* is computed: every test here pins a pair of
 engine configurations to bitwise-identical token streams.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,9 +20,20 @@ from repro.serving.executor import DeviceExecutor
 from repro.serving.scheduler import Scheduler
 
 
+def _arch_cfg(name):
+    """Reduced config; REPRO_PALLAS_SERVING=1 (the CI kernel-path job)
+    routes prefill/decode through the Pallas kernels (interpret mode on
+    CPU) so the masked kernel paths are exercised by the same parity
+    suite."""
+    cfg = configs.get_arch(name).reduced()
+    if os.environ.get("REPRO_PALLAS_SERVING") == "1":
+        cfg = cfg.replace(use_pallas_serving=True)
+    return cfg
+
+
 @pytest.fixture(scope="module")
 def gdn_model():
-    cfg = configs.get_arch("qwen3-next-gdn").reduced()
+    cfg = _arch_cfg("qwen3-next-gdn")
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     return cfg, params
 
@@ -54,7 +67,7 @@ def test_chunked_prefill_matches_serial_decode(arch):
     rglru state carries (conv carries included) and the attention
     rolling-buffer wrap (prompt longer than the KV buffer, max_len 16 <
     T=21) must reproduce token-by-token sequential decode."""
-    cfg = configs.get_arch(arch).reduced()
+    cfg = _arch_cfg(arch)
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     T, max_len = 21, 16
     tokens = jax.random.randint(jax.random.PRNGKey(1), (1, T), 1, cfg.vocab)
@@ -147,7 +160,9 @@ def test_overlap_ahead_of_slot_admit(gdn_model):
 
 def test_fused_admit_token_matches_sample_np_greedy(gdn_model):
     """Greedy: the fused on-device first token equals the host mirror
-    (``sample_np`` = argmax) over the same chunked-prefill logits."""
+    (``sample_np`` = argmax) over the same chunked-prefill logits —
+    replaying the masked plan literally (fixed-size padded tail chunk,
+    logits read at the last *valid* position)."""
     cfg, params = gdn_model
     prompt = np.arange(1, 14, dtype=np.int32)
     eng = DecodeEngine(cfg, params, max_slots=2, max_len=64, overlap=True)
@@ -159,19 +174,28 @@ def test_fused_admit_token_matches_sample_np_greedy(gdn_model):
                         decode_block=1, prefill_chunk=16)
     caches = lm.init_caches(cfg, 1, 64)
     pos = 0
-    for kind, n in ex.plan_prefill(len(prompt)):
-        size = n * ex.prefill_chunk if kind == "scan" else n
-        chunk = jnp.asarray(prompt[pos:pos + size])
-        pos += size
-        if kind == "scan":
+    C = ex.prefill_chunk
+    for step in ex.plan_prefill(len(prompt)):
+        chunk = np.asarray(prompt[pos:pos + step.tokens])
+        pos += step.tokens
+        if step.kind == "scan":
+            m = step.size
+            pad = np.zeros((m * C - len(chunk),), chunk.dtype)
             caches = lm.prefill_chunk_scan(
                 params, cfg, caches,
-                tokens=chunk.reshape(1, n, ex.prefill_chunk))
+                tokens=jnp.asarray(np.concatenate([chunk, pad])).reshape(
+                    1, m, C),
+                valid_lens=jnp.asarray(step.valid, jnp.int32))
         else:
-            x, caches = lm.prefill_chunk(params, cfg, caches,
-                                         tokens=chunk[None])
+            assert step.kind == "admit"
+            pad = np.zeros((step.size - len(chunk),), chunk.dtype)
+            x, caches = lm.prefill_chunk(
+                params, cfg, caches,
+                tokens=jnp.asarray(np.concatenate([chunk, pad]))[None],
+                valid_len=jnp.int32(step.valid))
+            last = x[:, step.valid - 1]
     from repro.models import layers
-    h = layers.rmsnorm_fwd(params["final_norm"], x[:, -1], cfg.norm_eps)
+    h = layers.rmsnorm_fwd(params["final_norm"], last, cfg.norm_eps)
     logits = np.asarray(lm._logits(params, cfg, h))[0]
     mirror = sampling.sample_np(np.random.default_rng(0), logits,
                                 temperature=0.0)
@@ -279,23 +303,86 @@ def test_engine_is_scheduler_facade(gdn_model):
     assert eng.cache_bytes == eng.executor.cache_bytes
 
 
-def test_plan_prefill_bucketing(gdn_model):
-    """Chunk plans decompose into power-of-two scan counts and tail sizes,
-    so the compile cache stays O(log) regardless of prompt lengths."""
+def test_plan_prefill_masked(gdn_model):
+    """The default planner emits at most ONE scan shape plus ONE
+    fixed-size masked admit chunk per prompt: the compile cache is O(1)
+    across all prompt lengths and no prompt ever dispatches more than two
+    distinct program shapes."""
     cfg, params = gdn_model
+    from repro.serving.executor import PlanStep
     ex = DeviceExecutor(cfg, params, max_slots=1, max_len=256,
                         decode_block=1, prefill_chunk=16)
-    assert ex.plan_prefill(16) == [("admit", 16)]
-    assert ex.plan_prefill(17) == [("scan", 1), ("admit", 1)]
-    assert ex.plan_prefill(75) == [("scan", 4), ("chunk", 8),
-                                   ("chunk", 2), ("admit", 1)]
-    assert ex.plan_prefill(3) == [("chunk", 2), ("admit", 1)]
+    assert ex.plan_mode == "masked"
+    assert ex.plan_prefill(16) == [PlanStep("admit", 16, 16, 16)]
+    assert ex.plan_prefill(17) == [PlanStep("scan", 1, 16, (16,)),
+                                   PlanStep("admit", 16, 1, 1)]
+    # 75 = 4 full chunks + ragged tail of 11 -> one scan + one masked tail
+    assert ex.plan_prefill(75) == [PlanStep("scan", 4, 64, (16,) * 4),
+                                   PlanStep("admit", 16, 11, 11)]
+    assert ex.plan_prefill(3) == [PlanStep("admit", 16, 3, 3)]
     # scan dispatches are capped so no single program can stall the tick
-    # thread for more than _MAX_SCAN_CHUNKS chunks
-    assert ex.plan_prefill(256) == [("scan", 4)] * 3 + \
-        [("scan", 2), ("scan", 1), ("admit", 16)]
-    sizes = {n for T in range(1, 257)
-             for kind, n in ex.plan_prefill(T)}
-    assert len(sizes) <= 10               # bounded program cache
+    # thread for more than _MAX_SCAN_CHUNKS chunks; the trailing dispatch
+    # pads with valid_len=0 placeholder chunks instead of a new shape
+    assert ex.plan_prefill(256) == \
+        [PlanStep("scan", 4, 64, (16,) * 4)] * 3 + \
+        [PlanStep("scan", 4, 48, (16, 16, 16, 0)),
+         PlanStep("admit", 16, 16, 16)]
+    # 5 full chunks balance into 2 dispatches of m=3 (1 placeholder),
+    # not 4 + 1 (two shapes)
+    assert ex.plan_prefill(5 * 16 + 1) == \
+        [PlanStep("scan", 3, 48, (16, 16, 16)),
+         PlanStep("scan", 3, 32, (16, 16, 0)),
+         PlanStep("admit", 16, 1, 1)]
+    shapes_all = set()
+    for T in range(1, 257):
+        plan = ex.plan_prefill(T)
+        shapes = {(s.kind, s.size) for s in plan}
+        assert len(shapes) <= 2, (T, plan)      # the tentpole guarantee
+        assert sum(s.tokens for s in plan) == T
+        shapes_all |= shapes
+    assert len(shapes_all) <= 5               # <= 4 scan m's + 1 admit
     with pytest.raises(ValueError, match="empty prompt"):
         ex.plan_prefill(0)
+
+
+def test_plan_prefill_pow2_baseline(gdn_model):
+    """plan_mode="pow2" keeps the PR-3 decomposition (no padding, no
+    masking) as the comparison baseline for cold-TTFT / compile counts."""
+    cfg, params = gdn_model
+    from repro.serving.executor import PlanStep
+    ex = DeviceExecutor(cfg, params, max_slots=1, max_len=256,
+                        decode_block=1, prefill_chunk=16, plan_mode="pow2")
+    assert ex.plan_prefill(16) == [PlanStep("admit", 16, 16)]
+    assert ex.plan_prefill(17) == [PlanStep("scan", 1, 16),
+                                   PlanStep("admit", 1, 1)]
+    assert ex.plan_prefill(75) == [PlanStep("scan", 4, 64),
+                                   PlanStep("chunk", 8, 8),
+                                   PlanStep("chunk", 2, 2),
+                                   PlanStep("admit", 1, 1)]
+    assert ex.plan_prefill(256) == [PlanStep("scan", 4, 64)] * 3 + \
+        [PlanStep("scan", 2, 32), PlanStep("scan", 1, 16),
+         PlanStep("admit", 16, 16)]
+    sizes = {s.size for T in range(1, 257) for s in ex.plan_prefill(T)}
+    assert len(sizes) <= 10               # bounded program cache
+    with pytest.raises(ValueError, match="plan_mode"):
+        DeviceExecutor(cfg, params, max_slots=1, max_len=64,
+                       decode_block=1, plan_mode="bogus")
+
+
+def test_prefill_chunk_validation(gdn_model):
+    """prefill_chunk is any size >= 1 (no pow2 assumption), but it must
+    fit the context buffers — over-long chunks error instead of silently
+    clamping."""
+    cfg, params = gdn_model
+    ex = DeviceExecutor(cfg, params, max_slots=1, max_len=64,
+                        decode_block=1, prefill_chunk=7)     # non-pow2 OK
+    assert ex.prefill_chunk == 7
+    plan = ex.plan_prefill(20)          # 2 full chunks + tail 6
+    assert [s.kind for s in plan] == ["scan", "admit"]
+    assert sum(s.tokens for s in plan) == 20
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        DeviceExecutor(cfg, params, max_slots=1, max_len=64,
+                       decode_block=1, prefill_chunk=65)
+    with pytest.raises(ValueError, match="prefill_chunk must be >= 1"):
+        DeviceExecutor(cfg, params, max_slots=1, max_len=64,
+                       decode_block=1, prefill_chunk=0)
