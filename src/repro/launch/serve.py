@@ -72,7 +72,9 @@ def build_engines(cfg, params, args, topo: ServingTopology):
             overlap=args.overlap, prefill_chunk=args.prefill_chunk,
             budget_ticks=args.budget_ticks, mesh=mesh,
             staging_depth=topo.staging_depth,
-            plan_mode=args.plan_mode))
+            plan_mode=args.plan_mode,
+            prefill_batching=args.prefill_batching,
+            prefill_budget=args.prefill_budget))
     return engines, slots
 
 
@@ -102,6 +104,17 @@ def main():
     ap.add_argument("--staging-depth", type=int, default=2,
                     help="staging-buffer ring size: ahead-of-slot "
                          "prefills outstanding under saturation")
+    ap.add_argument("--no-prefill-batching", dest="prefill_batching",
+                    action="store_false", default=None,
+                    help="dispatch one prefill program per staged prompt "
+                         "instead of fusing all staged prompts into one "
+                         "batched fixed-shape program per tick (the "
+                         "default batches whenever every mixer kind "
+                         "supports per-row masks and the FFN is not MoE)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="per-tick prefill token budget of the batched "
+                         "packer under saturation (default: every "
+                         "staging row gets a full scan + admit)")
     ap.add_argument("--engines", type=int, default=1,
                     help="number of per-mesh engines behind the router")
     ap.add_argument("--router-policy", default="least_loaded",
@@ -144,7 +157,9 @@ def main():
           f" = {eng.cache_bytes / 2**20:.2f} MiB slot buffers, "
           f"decode_block={args.decode_block}, "
           f"prefill={'overlapped' if args.overlap else 'serialized'} "
-          f"chunks of {eng.prefill_chunk} ({eng.plan_mode} plans)")
+          f"chunks of {eng.prefill_chunk} ({eng.plan_mode} plans, "
+          f"{'batched' if eng.prefill_batching else 'per-prompt'} "
+          f"staging)")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 17),
@@ -164,7 +179,8 @@ def main():
     print(f"  decode: {m['decode_us_per_token']:.0f} us/token "
           f"({m['decoded_tokens']} tokens in {m['decode_s']:.2f}s, "
           f"one host sync per {args.decode_block} tokens, "
-          f"{m['stage_dispatches']} staged prefill dispatches)")
+          f"{m['stage_dispatches']} staged prefill + "
+          f"{m['scatter_dispatches']} scatter dispatches)")
     print(f"  per-request means: ttft {m['mean_ttft_s'] * 1e3:.1f} ms, "
           f"latency {m['mean_latency_s'] * 1e3:.1f} ms, "
           f"{m['mean_tokens_per_s']:.1f} tok/s")

@@ -177,8 +177,9 @@ def attn_prefill_chunk(p, x, cache: KVCache, *, rope_theta=10000.0,
     (the rolling buffer holds exactly those, so this matches what serial
     `attn_decode_xla` calls would see).
 
-    ``valid_len`` (optional scalar int32) marks a ragged chunk padded to
-    C: only the first valid_len tokens are real.  Padded positions are
+    ``valid_len`` (optional scalar or per-row (B,) int32) marks a ragged
+    chunk padded to C: only the first valid_len tokens of each row are
+    real.  Padded positions are
     **not** inserted into the rolling buffer (a wrapped-slot write would
     overwrite still-visible valid tokens) and ``length`` advances by
     ``valid_len`` only; their k/v never reach a valid query's scores
@@ -263,8 +264,10 @@ def attn_prefill_chunk(p, x, cache: KVCache, *, rope_theta=10000.0,
         # padded positions must not touch the buffer: in the rolling phase
         # their wrapped slot aliases a still-visible valid token.  Routing
         # them to the out-of-bounds slot `size` with mode="drop" makes the
-        # scatter skip them entirely.
-        slots = jnp.where(jnp.arange(C)[None, :] < valid_len, slots, size)
+        # scatter skip them entirely.  valid_len is a scalar or a per-row
+        # (B,) vector (batched staging) — both reshape to (B or 1, 1).
+        vl = jnp.reshape(jnp.asarray(valid_len, jnp.int32), (-1, 1))
+        slots = jnp.where(jnp.arange(C)[None, :] < vl, slots, size)
     new_k = jax.vmap(lambda ck, kk, sl: ck.at[:, sl, :].set(
         kk.astype(ck.dtype), mode="drop"))(cache.k, kc, slots)
     new_v = jax.vmap(lambda cv, vv, sl: cv.at[:, sl, :].set(

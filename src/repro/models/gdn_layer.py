@@ -86,13 +86,16 @@ def mask_ragged_inputs(valid_len, k, v, log_g, beta):
     no-op on the recurrent state and contributes nothing to any valid
     output row, so a fixed-size chunk with a ragged tail computes the same
     state/output as the unpadded sequence (outputs at padded rows are
-    garbage — callers ignore them).  ``valid_len``: scalar int32.
+    garbage — callers ignore them).  ``valid_len``: scalar int32, or a
+    (B,) vector for per-row raggedness (the batched multi-prompt staging
+    path) — a scalar broadcasts to every row bitwise-identically.
     """
-    vm = jnp.arange(k.shape[1]) < valid_len            # (T,)
-    k = jnp.where(vm[None, :, None, None], k, jnp.zeros_like(k))
-    v = jnp.where(vm[None, :, None, None], v, jnp.zeros_like(v))
-    log_g = jnp.where(vm[None, :, None], log_g, jnp.zeros_like(log_g))
-    beta = jnp.where(vm[None, :, None], beta, jnp.zeros_like(beta))
+    vl = jnp.reshape(jnp.asarray(valid_len, jnp.int32), (-1, 1))
+    vm = jnp.arange(k.shape[1])[None, :] < vl          # (B or 1, T)
+    k = jnp.where(vm[:, :, None, None], k, jnp.zeros_like(k))
+    v = jnp.where(vm[:, :, None, None], v, jnp.zeros_like(v))
+    log_g = jnp.where(vm[:, :, None], log_g, jnp.zeros_like(log_g))
+    beta = jnp.where(vm[:, :, None], beta, jnp.zeros_like(beta))
     return k, v, log_g, beta
 
 
@@ -100,9 +103,10 @@ def gdn_prefill(p, x, state: GDNState, *, chunk=64, use_pallas=False,
                 valid_len=None):
     """Prompt processing; returns (out, final state).
 
-    ``valid_len`` (optional scalar int32): positions >= valid_len of ``x``
-    are padding — masked so the returned state equals the unpadded run
-    (the Pallas kernel masks internally; the XLA path pre-masks k/v/gates).
+    ``valid_len`` (optional scalar or per-row (B,) int32): positions
+    >= valid_len of ``x`` are padding — masked so the returned state
+    equals the unpadded run (the Pallas kernel masks internally; the XLA
+    path pre-masks k/v/gates).
     """
     q, k, v, log_g, beta = _proj(p, x)
     if use_pallas:

@@ -290,8 +290,9 @@ def prefill_chunk(params, cfg: ArchConfig, caches, tokens=None, embeds=None,
     (B, C, d), caches); feed the last chunk to ``prefill_sample`` for the
     logits + fused first-token draw.
 
-    ``valid_len`` (optional scalar int32) marks a *ragged* chunk padded to
-    its static size C: only the first valid_len tokens are real.  Every
+    ``valid_len`` (optional scalar or per-row (B,) int32) marks a
+    *ragged* chunk padded to its static size C: only the first valid_len
+    tokens of each row are real.  Every
     mixer masks the padding so the returned caches are exactly those of
     the unpadded prefix — one fixed-size masked program replaces the
     whole family of tail-sized programs.  Hidden rows at padded positions
@@ -313,10 +314,13 @@ def prefill_chunk_scan(params, cfg: ArchConfig, caches, tokens=None,
     one compiled program covers n chunks of prefill (the serving executor
     compiles one such program per scan length n).  Returns caches.
 
-    ``valid_lens`` (optional (n,) int32): per-chunk valid-token counts for
-    ragged prompts padded into the fixed (n, C) layout — a chunk with
-    valid_lens[i] == 0 is a pure no-op on the caches, so one scan shape
-    covers any number of trailing placeholder chunks.
+    ``valid_lens`` (optional (n,) or (n, B) int32): per-chunk valid-token
+    counts for ragged prompts padded into the fixed (n, C) layout — a
+    chunk with valid_lens[i] == 0 is a pure no-op on the caches, so one
+    scan shape covers any number of trailing placeholder chunks.  The
+    (n, B) form carries a *per-row* count per scan step (the batched
+    multi-prompt staging path): the scan unstacks the leading axis, so
+    each step's chunk sees a (B,) valid_len vector.
     """
     xs = tokens if tokens is not None else embeds
     xs = jnp.moveaxis(xs, 1, 0)                    # (n, B, C[, d])
@@ -347,8 +351,11 @@ def prefill_sample(params, cfg: ArchConfig, caches, sampler, sample_fn,
     ``sampler``/``sample_fn`` as in ``decode_steps`` (the serving executor
     passes a 1-row ``repro.serving.sampling`` state and its ``sample``).
     ``valid_len`` marks a ragged final chunk: the admit logits come from
-    the last *valid* position, not the last row of the padded chunk.
-    Returns (token (B,), sampler, caches).
+    the last *valid* position, not the last row of the padded chunk.  It
+    may be a per-row (B,) vector (batched multi-prompt admit) — each row
+    reads its own last valid position; a valid_len=0 placeholder row is
+    clamped to position 0 (its token is garbage and the caller's admit
+    mask discards it).  Returns (token (B,), sampler, caches).
     """
     x, caches = prefill_chunk(params, cfg, caches, tokens=tokens,
                               embeds=embeds, dp_axes=dp_axes,
@@ -356,8 +363,13 @@ def prefill_sample(params, cfg: ArchConfig, caches, sampler, sample_fn,
     if valid_len is None:
         h_last = x[:, -1]
     else:
-        h_last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1,
-                                              axis=1)[:, 0]
+        vl = jnp.asarray(valid_len, jnp.int32)
+        if vl.ndim == 0:
+            h_last = jax.lax.dynamic_slice_in_dim(x, vl - 1, 1,
+                                                  axis=1)[:, 0]
+        else:
+            idx = jnp.maximum(vl - 1, 0)[:, None, None]        # (B, 1, 1)
+            h_last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
     h = layers.rmsnorm_fwd(params["final_norm"], h_last, cfg.norm_eps)
     tok, sampler = sample_fn(sampler, _logits(params, cfg, h))
     return tok.astype(jnp.int32), sampler, caches

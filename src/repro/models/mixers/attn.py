@@ -20,6 +20,7 @@ class Attention(SequenceMixer):
     kind = "attn"
     is_attention = True
     supports_ragged_prefill = True
+    supports_batched_ragged_prefill = True   # per-row (B,) valid_len
     quadratic = True           # O(T) KV — no fixed-size persistent state
     state_passes = 0
 

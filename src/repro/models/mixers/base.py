@@ -121,6 +121,13 @@ class SequenceMixer:
     # registered without masking still serves, it just pays the larger
     # compile cache.
     supports_ragged_prefill: bool = False
+    # True iff prefill_chunk additionally accepts a per-row (B,) valid_len
+    # vector (each batch row ragged at its own boundary).  The batched
+    # multi-prompt staging path (one fused prefill program over all staged
+    # prompts per tick) requires it from every kind in the pattern; the
+    # executor falls back to per-prompt dispatch otherwise.  Implies
+    # supports_ragged_prefill.
+    supports_batched_ragged_prefill: bool = False
 
     @classmethod
     def init_params(cls, key, cfg, dtype):

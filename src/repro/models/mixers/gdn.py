@@ -13,6 +13,7 @@ from repro.models.mixers.base import ArraySpec, CacheSpec, SequenceMixer
 class GatedDeltaNet(SequenceMixer):
     kind = "gdn"
     supports_ragged_prefill = True
+    supports_batched_ragged_prefill = True   # per-row (B,) valid_len
     state_passes = 2           # fused Alg. 2: one read + one write pass
     fused = True               # decode algorithm (Alg. 2 vs Alg. 1)
 

@@ -15,6 +15,7 @@ _CONV_W = rglru_layer.CONV_WIDTH
 class RGLRU(SequenceMixer):
     kind = "rglru"
     supports_ragged_prefill = True
+    supports_batched_ragged_prefill = True   # per-row (B,) valid_len
     state_passes = 2           # h <- a*h + b : one read + one write
 
     @classmethod

@@ -14,6 +14,7 @@ _CONV_W = ssm_layer.CONV_WIDTH
 class SSD(SequenceMixer):
     kind = "ssm"
     supports_ragged_prefill = True
+    supports_batched_ragged_prefill = True   # per-row (B,) valid_len
     state_passes = 2           # S <- g*S + B x^T : one read + one write
 
     @classmethod

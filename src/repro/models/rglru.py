@@ -87,10 +87,13 @@ def rglru_train(p, x):
 
 
 def rglru_prefill(p, x, state: RGLRUState, valid_len=None):
-    """``valid_len`` (optional scalar int32): positions >= valid_len are
-    padding — their gates are forced to the identity (log_a = 0, input 0)
-    so the carried h and the conv carry are exactly those after the valid
-    prefix (padded output rows are garbage; callers ignore them)."""
+    """``valid_len`` (optional scalar or per-row (B,) int32): positions
+    >= valid_len are padding — their gates are forced to the identity
+    (log_a = 0, input 0) so the carried h and the conv carry are exactly
+    those after the valid prefix (padded output rows are garbage; callers
+    ignore them).  A (B,) vector gathers each row's conv carry at its own
+    boundary (the batched staging path); a scalar keeps the
+    ``dynamic_slice`` path bitwise-unchanged."""
     B, T, _ = x.shape
     xb = layers.dot(x, p["in_x"])
     yb = jax.nn.gelu(layers.dot(x, p["in_y"]).astype(jnp.float32))
@@ -99,12 +102,18 @@ def rglru_prefill(p, x, state: RGLRUState, valid_len=None):
     if valid_len is None:
         new_conv = full[:, -(conv_w - 1):, :]
     else:
-        new_conv = jax.lax.dynamic_slice_in_dim(full, valid_len,
-                                                conv_w - 1, axis=1)
+        vl = jnp.asarray(valid_len, jnp.int32)
+        if vl.ndim == 0:
+            new_conv = jax.lax.dynamic_slice_in_dim(full, vl,
+                                                    conv_w - 1, axis=1)
+        else:
+            idx = vl[:, None] + jnp.arange(conv_w - 1)[None, :]
+            new_conv = jnp.take_along_axis(full, idx[:, :, None], axis=1)
     xb = layers.conv1d_fwd(p["conv"], full)[:, -T:, :]
     log_a, gated = _gates(p, xb)
     if valid_len is not None:
-        vm = (jnp.arange(T) < valid_len)[None, :, None]
+        vl2 = jnp.reshape(jnp.asarray(valid_len, jnp.int32), (-1, 1))
+        vm = (jnp.arange(T)[None, :] < vl2)[:, :, None]
         log_a = jnp.where(vm, log_a, jnp.zeros_like(log_a))   # a = 1
         gated = jnp.where(vm, gated, jnp.zeros_like(gated))   # b = 0
     h = _scan_rglru(log_a, gated, state.h)

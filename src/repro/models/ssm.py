@@ -105,7 +105,10 @@ def _conv_prefill(conv_p, u, cache, valid_len=None):
     With ``valid_len`` set, the returned carry is the last ``w - 1``
     *valid* inputs (rows ``[valid_len, valid_len + w - 1)`` of
     cache‖u) — the carry serial decode would hold after the valid
-    prefix, not the padded garbage at the block's end.
+    prefix, not the padded garbage at the block's end.  ``valid_len`` may
+    be a per-row (B,) vector (the batched staging path): each row's carry
+    is gathered at its own boundary; a scalar keeps the
+    ``dynamic_slice`` path bitwise-unchanged.
     """
     T = u.shape[1]
     w = conv_p["w"].shape[0]
@@ -114,7 +117,12 @@ def _conv_prefill(conv_p, u, cache, valid_len=None):
     if valid_len is None:
         tail = full[:, -(w - 1):, :]
     else:
-        tail = jax.lax.dynamic_slice_in_dim(full, valid_len, w - 1, axis=1)
+        vl = jnp.asarray(valid_len, jnp.int32)
+        if vl.ndim == 0:
+            tail = jax.lax.dynamic_slice_in_dim(full, vl, w - 1, axis=1)
+        else:
+            idx = vl[:, None] + jnp.arange(w - 1)[None, :]   # (B, w-1)
+            tail = jnp.take_along_axis(full, idx[:, :, None], axis=1)
     return _silu(out), tail
 
 

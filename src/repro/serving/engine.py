@@ -28,11 +28,19 @@ slots decode; default on), ``prefill_chunk`` (chunk size),
 "pow2": the power-of-two tail baseline — token streams are identical
 across modes, only the compile cache moves), ``budget_ticks``
 (budget-aware tick length; default on), ``mesh`` (a
-``("data", "model")`` device mesh; default single-device) and
+``("data", "model")`` device mesh; default single-device),
 ``staging_depth`` (ahead-of-slot prefills outstanding under saturation;
-default 2).  ``overlap``, ``budget_ticks``, ``staging_depth`` and the
-*data axis* of the mesh move timing/placement only: they run the same
-programs over the same chunk plans, so token streams are bitwise
+default 2), ``prefill_batching`` (fuse ALL staged prompts into one
+batched fixed-shape prefill program per dispatch, with per-row
+``valid_lens`` masking and a multi-row slot scatter — dispatches per
+tick are O(1) in queue depth; default auto: on whenever every mixer
+kind supports per-row masks and the FFN is not MoE, off otherwise) and
+``prefill_budget`` (the batched packer's per-tick prefill token budget
+under saturation; default ``staging_depth`` full scans + admits).
+``overlap``, ``budget_ticks``, ``staging_depth``, ``prefill_batching``,
+``prefill_budget`` and the *data axis* of the mesh move
+timing/placement only: they run the same per-row chunk math over the
+same C-quantized chunk decompositions, so token streams are bitwise
 identical across those settings.  ``prefill_chunk`` changes the plan and
 hence float reduction order, and the mesh's *model* axis splits head /
 context reductions across devices (psum partial ordering) — greedy

@@ -8,12 +8,22 @@ touches an accelerator buffer lives here; everything that touches a
     leading slot axis, the per-slot sampler arrays and the per-slot last
     tokens, all donated through every tick so XLA updates them in place
     (the TPU analogue of the paper's BRAM-resident state);
-  * the **staging ring** — ``staging_depth`` single-sequence cache pytrees
-    plus 1-row sampler states that chunked prefill streams into while the
-    resident slots keep decoding, each scattered into a real slot only
-    once its staging completes (the serving-layer version of the paper's
-    prepare/compute/store overlap; a ring deeper than 1 lets several
-    queued requests prefill ahead under saturation);
+  * the **staging ring** — under the default **batched** staging
+    (``prefill_batching``), ONE ``(staging_depth, ...)`` cache pytree
+    whose rows are the staged prompts, plus a ``staging_depth``-row
+    sampler state and per-row first tokens: every tick fuses ALL staged
+    prompts into at most one fixed-shape ``(staging_depth,
+    _MAX_SCAN_CHUNKS, prefill_chunk)`` scan + one admit dispatch with
+    per-row ``valid_lens`` (rows/chunks past a prompt's end are bitwise
+    no-op placeholders), and finished rows enter their slots through ONE
+    multi-row scatter — dispatches per tick are O(1) in queue depth.
+    The per-prompt fallback (pow2 plans, MoE FFNs, mixer kinds without
+    per-row masks) keeps ``staging_depth`` single-sequence cache pytrees
+    plus 1-row sampler states that chunked prefill streams into while
+    the resident slots keep decoding, each scattered into a real slot
+    only once its staging completes (the serving-layer version of the
+    paper's prepare/compute/store overlap; a ring deeper than 1 lets
+    several queued requests prefill ahead under saturation);
   * the **programs** — one jitted, donated program per static shape:
     - ``decode(k)``: the ``lm.decode_steps`` fused decode+sample scan, one
       program per bucketed tick length k (budget-aware ticks pick the
@@ -102,6 +112,31 @@ def _pow2_floor(n: int) -> int:
     return 1 << (n.bit_length() - 1)
 
 
+def _bscatter_fn(caches, sampler, tokens, bstaging, bsampler, btoks,
+                 slots, release):
+    """Multi-row scatter: admit every finished staging row in ONE
+    dispatch.  ``slots`` is a (D,) int32 map from staging row to target
+    slot, with the sentinel ``max_slots`` (out of bounds, dropped by
+    ``mode="drop"``) for rows not admitting; ``release`` is a (D,) bool
+    mask of rows to zero afterwards (admitted rows plus rows whose
+    request finished at admit) so a released row is clean for the next
+    ``bstage_begin``.  Distinct real slots per call is the scheduler's
+    invariant — the scatter never sees duplicates."""
+    caches = jax.tree.map(
+        lambda f, o: f.at[:, slots].set(o.astype(f.dtype), mode="drop"),
+        caches, bstaging)
+    sampler = {
+        k: v.at[slots].set(bsampler[k].astype(v.dtype), mode="drop")
+        for k, v in sampler.items()}
+    tokens = tokens.at[slots].set(btoks.astype(tokens.dtype), mode="drop")
+    d = release.shape[0]
+    bstaging = jax.tree.map(
+        lambda o: jnp.where(release.reshape((1, d) + (1,) * (o.ndim - 2)),
+                            jnp.zeros_like(o), o),
+        bstaging)
+    return caches, sampler, tokens, bstaging
+
+
 def _scatter_fn(caches, sampler, tokens, staging, row, tok, slot):
     """Write the staging cache pytree, sampler row and first token into
     slot ``slot``.  Cache leaves are (repeats, slots, ...) vs
@@ -126,7 +161,8 @@ class DeviceExecutor:
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int,
                  max_len: int, decode_block: int, prefill_chunk: int = 16,
                  mesh: Optional[Mesh] = None, staging_depth: int = 2,
-                 plan_mode: str = "masked"):
+                 plan_mode: str = "masked",
+                 prefill_batching: Optional[bool] = None):
         if staging_depth < 1:
             raise ValueError(
                 f"staging_depth must be >= 1, got {staging_depth}")
@@ -164,6 +200,47 @@ class DeviceExecutor:
                     f"prefill_chunk to get fixed-shape plans",
                     RuntimeWarning)
                 plan_mode = "pow2"
+        # batched multi-prompt prefill: fuse every staged prompt into ONE
+        # fixed-shape program per dispatch (per-row valid_lens; rows past
+        # a prompt's end are bitwise no-op placeholder chunks).  Auto
+        # (None) turns it on whenever it is provably bitwise-safe:
+        #   * masked plans only — batching IS per-row masking;
+        #   * every mixer kind must accept a per-row (B,) valid_len
+        #     (supports_batched_ragged_prefill);
+        #   * no MoE FFN: moe_fwd's expert-capacity queue is a cumsum
+        #     over the whole (rows x tokens) dispatch group, so batched
+        #     rows would compete for capacity and diverge bitwise from
+        #     per-prompt dispatch.
+        # An explicit True warns and falls back when a gate fails.
+        batching_blocked = None
+        if plan_mode != "masked":
+            batching_blocked = ("batched staging rides on masked "
+                                "(valid_len) chunks; plan_mode is "
+                                f"{plan_mode!r}")
+        elif cfg.ffn in ("moe", "moe+dense"):
+            batching_blocked = (
+                "MoE expert-capacity dispatch couples rows within a "
+                "batch (cumsum queue positions over the whole group), "
+                "so batched prefill cannot be bitwise-identical to "
+                "per-prompt dispatch")
+        else:
+            from repro.models.mixers import get_mixer
+            unbatched = sorted({k for k in cfg.pattern
+                                if not get_mixer(k)
+                                .supports_batched_ragged_prefill})
+            if unbatched:
+                batching_blocked = (
+                    f"mixer kind(s) {unbatched} do not support per-row "
+                    f"(B,) valid_len prefill chunks (set "
+                    f"supports_batched_ragged_prefill = True after "
+                    f"generalizing the mask)")
+        if prefill_batching and batching_blocked:
+            warnings.warn(f"prefill_batching disabled: {batching_blocked}",
+                          RuntimeWarning)
+        self.prefill_batching = (batching_blocked is None
+                                 if prefill_batching is None
+                                 else bool(prefill_batching)
+                                 and batching_blocked is None)
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
@@ -214,6 +291,18 @@ class DeviceExecutor:
         self._scan_p: Dict[Tuple[int, bool, bool], object] = {}
         self._chunk_p: Dict[Tuple[int, bool], object] = {}
         self._admit_p: Dict[Tuple[int, bool, bool], object] = {}
+        # batched staging (lazy): one (staging_depth, ...) cache pytree, a
+        # staging_depth-row sampler and per-row first tokens, plus the
+        # batched program caches — allocated on the first batched call so
+        # engines running the per-prompt path pay nothing.  The batched
+        # scan always runs at the fixed shape (D, _MAX_SCAN_CHUNKS, C)
+        # (rows with fewer chunks pad with valid_len = 0 placeholders), so
+        # the whole batched family is ≤ 2 programs per input kind + one
+        # multi-row scatter — the paper's fixed-iteration datapath.
+        self._batched_ready = False
+        self._bscan_p: Dict[bool, object] = {}
+        self._badmit_p: Dict[bool, object] = {}
+        self._bscatter_p = None
         # donate only the slot buffers: the staging pytree's (repeats, 1,
         # ...) leaves have no same-shape output to alias (XLA would warn)
         self._scatter_p = self._jit(
@@ -496,6 +585,211 @@ class DeviceExecutor:
         self.staging_row[buf] = None
         self.staging_tok[buf] = None
 
+    # ------------------------------------------------- batched staging
+    def _ensure_batched(self):
+        """Allocate the batched staging buffers + multi-row scatter on
+        first use: ONE (staging_depth, ...) cache pytree (every staged
+        prompt is a row), a staging_depth-row sampler state holding the
+        advanced admit rows, and the (staging_depth,) first tokens.  Under
+        a mesh the row axis shards on "data" exactly like the slot axis
+        (``slot_specs`` with batch = staging_depth)."""
+        if self._batched_ready:
+            return
+        D = self.staging_depth
+        self.bspec = lm.cache_specs(self.cfg, D, self.max_len)
+        if self.mesh is None:
+            self._sh_bstaging = self._sh_bsampler = self._sh_btoks = None
+        else:
+            from repro.parallel import sharding as rules
+            mesh = self.mesh
+            ps = rules.slot_specs(self.cfg, mesh, self.bspec.shape_dtype(),
+                                  D)
+            if D % rules.axis_size(mesh, rules.dp_axes(mesh)):
+                # a non-dividing row count must not re-place DP axes on a
+                # state dim (cache_specs' tiny-batch rule): distributed
+                # state reductions would break the bitwise batching
+                # guarantee — replicate the rows instead, keeping only the
+                # "model" (head / KV context) placement
+                dp = set(rules.dp_axes(mesh))
+
+                def _drop_dp(s):
+                    return P(*[None if (a in dp or (isinstance(a, tuple)
+                                                    and set(a) & dp))
+                               else a for a in s])
+                ps = jax.tree.map(_drop_dp, ps,
+                                  is_leaf=lambda x: isinstance(x, P))
+            self._sh_bstaging = rules.make_shardings(mesh, ps)
+            samp = jax.eval_shape(lambda: sampling.init_state(D))
+            self._sh_bsampler = rules.make_shardings(
+                mesh, rules.sampler_specs(mesh, samp, D))
+            self._sh_btoks = NamedSharding(
+                mesh, rules.token_slot_spec(mesh, D))
+        self.bstaging = self._zeros(self.bspec, self._sh_bstaging)
+        self.bsampler = self._put(sampling.init_state(D),
+                                  self._sh_bsampler)
+        self.btoks = self._put(jnp.zeros((D,), jnp.int32), self._sh_btoks)
+        # host mirror of per-row sampling parameters (written by
+        # bstage_begin, shipped whole into every batched admit dispatch;
+        # rows not admitting carry stale values the admit mask discards)
+        self._bargs = {
+            "rid": np.zeros((D,), np.int32),
+            "temperature": np.zeros((D,), np.float32),
+            "top_k": np.zeros((D,), np.int32),
+            "top_p": np.ones((D,), np.float32),
+            "eos_id": np.full((D,), -1, np.int32),
+            "budget": np.ones((D,), np.int32),
+        }
+        self._bseed = np.int32(0)
+        self._bscatter_p = self._jit(
+            _bscatter_fn, donate=(0, 1, 2, 3),
+            in_sh=(self._sh_caches, self._sh_sampler, self._sh_tokens,
+                   self._sh_bstaging, self._sh_bsampler, self._sh_btoks,
+                   self._sh_rep, self._sh_rep),
+            out_sh=(self._sh_caches, self._sh_sampler, self._sh_tokens,
+                    self._sh_bstaging))
+        self._batched_ready = True
+
+    def bstage_begin(self, row: int, *, seed: int, rid: int,
+                     temperature: float, top_k: int, top_p: float,
+                     eos_id, budget: int):
+        """Record a request's sampling parameters for staging row ``row``
+        (host-only — no dispatch).  The row's staging caches are already
+        zero: rows are release-zeroed inside the multi-row scatter, so
+        beginning a row never costs a device program."""
+        self._ensure_batched()
+        self._bseed = np.int32(seed)
+        self._bargs["rid"][row] = rid
+        self._bargs["temperature"][row] = temperature
+        self._bargs["top_k"][row] = top_k
+        self._bargs["top_p"][row] = top_p
+        self._bargs["eos_id"][row] = -1 if eos_id is None else eos_id
+        self._bargs["budget"][row] = budget
+
+    def bstage_chunk_scan(self, entries):
+        """Advance several staging rows by their next full chunks in ONE
+        fixed-shape dispatch.
+
+        entries: list of ``(row, flat_chunk, take)`` — ``take`` full
+        chunks (take * C tokens, or (take * C, d) embeds) for row
+        ``row``.  Every dispatch runs the same (D, _MAX_SCAN_CHUNKS, C)
+        program: rows taking fewer chunks (and rows with no entry) pad
+        with valid_len = 0 placeholder chunks, which are bitwise no-ops
+        on their caches — the fixed five-phase iteration regardless of
+        occupancy."""
+        D, C, M = self.staging_depth, self.prefill_chunk, _MAX_SCAN_CHUNKS
+        self._ensure_batched()
+        first = np.asarray(entries[0][1])
+        is_embeds = first.dtype.kind == "f"
+        vl = np.zeros((M, D), np.int32)
+        if is_embeds:
+            x = np.zeros((D, M, C, first.shape[-1]), first.dtype)
+        else:
+            x = np.zeros((D, M, C), np.int32)
+        for row, chunk, take in entries:
+            chunk = np.asarray(chunk)
+            x[row, :take] = chunk.reshape((take, C) + chunk.shape[1:])
+            vl[:take, row] = C
+        prog = self._bscan_p.get(is_embeds)
+        if prog is None:
+            kw = "embeds" if is_embeds else "tokens"
+            prog = self._jit(
+                lambda p, t, v, c, kw=kw: lm.prefill_chunk_scan(
+                    p, self.cfg, c, valid_lens=v, **{kw: t}),
+                donate=(3,),
+                in_sh=(self._sh_params, self._sh_rep, self._sh_rep,
+                       self._sh_bstaging),
+                out_sh=self._sh_bstaging)
+            self._bscan_p[is_embeds] = prog
+        xj = (jnp.asarray(x, jnp.dtype(self.cfg.act_dtype)) if is_embeds
+              else jnp.asarray(x))
+        self.bstaging = prog(self.params, xj, jnp.asarray(vl),
+                             self.bstaging)
+
+    def bstage_admit(self, entries):
+        """Final (ragged tail) chunk + fused first-token draw for several
+        staging rows in ONE dispatch: builds every admitting row's sampler
+        state on device (``sampling.admit_rows`` — keys folded from
+        (seed, rid) exactly as the per-prompt path does, so draw streams
+        are batching-invariant), prefills the fixed-size masked tail,
+        samples, and merges tokens/sampler rows under the admit mask
+        (rows not admitting are valid_len = 0 cache no-ops and keep their
+        previous token/sampler values).
+
+        entries: list of ``(row, flat_chunk, valid_len)`` with
+        1 <= valid_len <= prefill_chunk tokens in ``flat_chunk``."""
+        D, C = self.staging_depth, self.prefill_chunk
+        self._ensure_batched()
+        first = np.asarray(entries[0][1])
+        is_embeds = first.dtype.kind == "f"
+        vl = np.zeros((D,), np.int32)
+        amask = np.zeros((D,), bool)
+        if is_embeds:
+            x = np.zeros((D, C, first.shape[-1]), first.dtype)
+        else:
+            x = np.zeros((D, C), np.int32)
+        for row, chunk, valid in entries:
+            chunk = np.asarray(chunk)
+            x[row, :valid] = chunk
+            vl[row] = valid
+            amask[row] = True
+        prog = self._badmit_p.get(is_embeds)
+        if prog is None:
+            kw = "embeds" if is_embeds else "tokens"
+
+            def _badmit(p, t, c, samp, toks, v, am, seed, rid, temp,
+                        top_k, top_p, eos, budget, kw=kw):
+                rows = sampling.admit_rows(seed, rid, temp, top_k, top_p,
+                                           eos, budget)
+                tok, rows, c = lm.prefill_sample(
+                    p, self.cfg, c, rows, sampling.sample, valid_len=v,
+                    **{kw: t})
+                toks = jnp.where(am, tok.astype(toks.dtype), toks)
+                samp = {
+                    k: jnp.where(
+                        am.reshape((-1,) + (1,) * (w.ndim - 1)),
+                        rows[k].astype(w.dtype), w)
+                    for k, w in samp.items()}
+                return toks, samp, c
+
+            prog = self._jit(
+                _badmit, donate=(2, 3, 4),
+                in_sh=((self._sh_params, self._sh_rep, self._sh_bstaging,
+                        self._sh_bsampler, self._sh_btoks)
+                       + self._rep_sh(9)
+                       if self.mesh is not None else None),
+                out_sh=((self._sh_btoks, self._sh_bsampler,
+                         self._sh_bstaging)
+                        if self.mesh is not None else None))
+            self._badmit_p[is_embeds] = prog
+        xj = (jnp.asarray(x, jnp.dtype(self.cfg.act_dtype)) if is_embeds
+              else jnp.asarray(x))
+        self.btoks, self.bsampler, self.bstaging = prog(
+            self.params, xj, self.bstaging, self.bsampler, self.btoks,
+            jnp.asarray(vl), jnp.asarray(amask), self._bseed,
+            self._bargs["rid"], self._bargs["temperature"],
+            self._bargs["top_k"], self._bargs["top_p"],
+            self._bargs["eos_id"], self._bargs["budget"])
+
+    def bscatter(self, assigns, release_rows=()):
+        """Admit every finished staging row into its slot in ONE donated
+        dispatch.  assigns: list of ``(slot, row)`` pairs (distinct
+        slots); release_rows: extra rows to zero without scattering
+        (requests that finished at admit).  Assigned rows are always
+        released — after the scatter both are clean for reuse."""
+        self._ensure_batched()
+        slots = np.full((self.staging_depth,), self.max_slots, np.int32)
+        release = np.zeros((self.staging_depth,), bool)
+        for slot, row in assigns:
+            slots[row] = slot
+            release[row] = True
+        for row in release_rows:
+            release[row] = True
+        (self.caches, self.sampler, self.tokens,
+         self.bstaging) = self._bscatter_p(
+            self.caches, self.sampler, self.tokens, self.bstaging,
+            self.bsampler, self.btoks, jnp.asarray(slots),
+            jnp.asarray(release))
+
     # ----------------------------------------------------------- metrics
     def compiled_programs(self) -> Dict[str, int]:
         """Live jitted-program cache sizes per family.
@@ -508,14 +802,17 @@ class DeviceExecutor:
         top.  Asserted by ``tests/test_ragged_prefill.py`` and reported
         through ``Scheduler.metrics()``."""
         prefill = (len(self._scan_p) + len(self._chunk_p)
-                   + len(self._admit_p))
+                   + len(self._admit_p) + len(self._bscan_p)
+                   + len(self._badmit_p))
         return {
             "decode": len(self._decode_p),
-            "prefill_scan": len(self._scan_p),
+            "prefill_scan": len(self._scan_p) + len(self._bscan_p),
             "prefill_chunk": len(self._chunk_p),
-            "prefill_admit": len(self._admit_p),
+            "prefill_admit": len(self._admit_p) + len(self._badmit_p),
             "prefill": prefill,
-            "total": len(self._decode_p) + prefill + 1,   # + slot scatter
+            # + the slot scatter, + the multi-row scatter once built
+            "total": (len(self._decode_p) + prefill + 1
+                      + (1 if self._batched_ready else 0)),
         }
 
     # ------------------------------------------------------------- ticks

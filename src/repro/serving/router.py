@@ -206,6 +206,10 @@ class Router:
             "decode_s": decode_s,
             "decode_us_per_token": decode_s / max(1, decoded) * 1e6,
             "stage_dispatches": sum(m["stage_dispatches"] for m in per),
+            "scatter_dispatches": sum(m["scatter_dispatches"]
+                                      for m in per),
+            "prefill_batching": int(all(m["prefill_batching"]
+                                        for m in per)),
             "compiled_programs": sum(m["compiled_programs"] for m in per),
             "mean_ttft_s": wmean("mean_ttft_s"),
             "mean_latency_s": wmean("mean_latency_s"),

@@ -104,6 +104,32 @@ def admit_row(seed, rid, temperature, top_k, top_p, eos_id,
     }
 
 
+def admit_rows(seed, rids, temperature, top_k, top_p, eos_id,
+               budget) -> SamplerState:
+    """Batched ``admit_row``: (D,) parameter vectors -> a D-row sampler
+    state for the executor's batched admit program.  Each row's key is
+    ``fold_in(PRNGKey(seed), rids[d])`` — exactly the key ``admit_row``
+    builds for that request, so a request's draw stream is independent of
+    whether it was admitted alone or batched (the bitwise-parity
+    guarantee of the batched staging path).  Placeholder rows (no request
+    admitting this dispatch) carry whatever stale parameters the caller
+    left; the caller's admit mask discards their draws."""
+    base = jax.random.PRNGKey(seed)
+    keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(
+        jnp.asarray(rids, jnp.int32))
+    d = keys.shape[0]
+    return {
+        "key": keys.astype(jnp.uint32),
+        "temperature": jnp.reshape(jnp.asarray(temperature, jnp.float32),
+                                   (d,)),
+        "top_k": jnp.reshape(jnp.asarray(top_k, jnp.int32), (d,)),
+        "top_p": jnp.reshape(jnp.asarray(top_p, jnp.float32), (d,)),
+        "eos_id": jnp.reshape(jnp.asarray(eos_id, jnp.int32), (d,)),
+        "remaining": jnp.reshape(jnp.asarray(budget, jnp.int32), (d,)),
+        "done": jnp.zeros((d,), bool),
+    }
+
+
 # ------------------------------------------------------------- filtering
 
 def _filter_row(logits, temperature, top_k, top_p):

@@ -105,13 +105,20 @@ class Request:
 @dataclass(eq=False)      # identity semantics: entries are removed by `is`
 class _Staging:
     """One in-flight staged prefill: a request bound to an executor ring
-    buffer, with its chunk-plan progress and staged-ready flag."""
+    buffer (= a batched staging row), with its chunk-plan progress and
+    staged-ready flag.  The per-prompt path walks ``plan``; the batched
+    path tracks ``chunks_left`` full chunks + the fixed-size masked
+    ``tail`` directly (its "plan" is whatever the per-tick packer
+    allocates)."""
     req: Request
     plan: List[PlanStep]
     buf: int
     plan_pos: int = 0
     prompt_pos: int = 0
     ready: bool = False
+    chunks_left: int = 0      # batched path: full C-chunks not yet staged
+    tail: int = 0             # batched path: valid tokens in the admit chunk
+    admitted: bool = False    # batched path: admit dispatched, token pending
 
 
 class Scheduler:
@@ -121,9 +128,14 @@ class Scheduler:
                  max_len: int = 256, seed: int = 0, decode_block: int = 1,
                  overlap: bool = True, prefill_chunk: int = 16,
                  budget_ticks: bool = True, mesh=None,
-                 staging_depth: int = 2, plan_mode: str = "masked"):
+                 staging_depth: int = 2, plan_mode: str = "masked",
+                 prefill_batching: Optional[bool] = None,
+                 prefill_budget: Optional[int] = None):
         if decode_block < 1:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(f"prefill_budget must be >= 1 token, got "
+                             f"{prefill_budget}")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -135,19 +147,36 @@ class Scheduler:
         self.executor = DeviceExecutor(
             cfg, params, max_slots=max_slots, max_len=max_len,
             decode_block=decode_block, prefill_chunk=prefill_chunk,
-            mesh=mesh, staging_depth=staging_depth, plan_mode=plan_mode)
+            mesh=mesh, staging_depth=staging_depth, plan_mode=plan_mode,
+            prefill_batching=prefill_batching)
+        # per-tick prefill token budget of the batched packer, in
+        # scan-chunk units (an admit dispatch costs one unit).  The
+        # default lets every staging row take a full scan + admit per
+        # tick — the batched path is then never slower than the
+        # per-prompt one-chunk-per-entry loop it replaces.
+        C = self.executor.prefill_chunk
+        from repro.serving.executor import _MAX_SCAN_CHUNKS
+        self.prefill_budget = prefill_budget
+        self._budget_chunks = (
+            max(1, prefill_budget // C) if prefill_budget is not None
+            else self.executor.staging_depth * (_MAX_SCAN_CHUNKS + 1))
+        self._max_scan_chunks = _MAX_SCAN_CHUNKS
         self.free: Deque[int] = deque(range(max_slots))
         self.active: Dict[int, Request] = {}
         self.queue: Deque[Request] = deque()
         self._all: List[Request] = []
         # staging state machine: FIFO of in-flight staged prefills, one per
-        # executor ring buffer (free ring indices in _free_bufs)
+        # executor ring buffer (free ring indices in _free_bufs); batched
+        # rows whose request finished at admit wait in _dirty_rows until a
+        # multi-row scatter release-zeroes them
         self._stagings: List[_Staging] = []
         self._free_bufs: Deque[int] = deque(range(self.staging_depth))
+        self._dirty_rows: set = set()
         self.ticks = 0
         self.decode_s = 0.0         # wall time inside decode ticks (+ sync)
         self.decoded_tokens = 0     # tokens emitted by ticks (not admit)
         self.stage_dispatches = 0   # prefill-chunk programs dispatched
+        self.scatter_dispatches = 0  # slot-scatter programs dispatched
         self._metrics_from = 0      # _all watermark set by reset_metrics
 
     # ---------------------------------------------------- compat surface
@@ -162,6 +191,10 @@ class Scheduler:
     @property
     def plan_mode(self) -> str:
         return self.executor.plan_mode
+
+    @property
+    def prefill_batching(self) -> bool:
+        return self.executor.prefill_batching
 
     @property
     def staging_depth(self) -> int:
@@ -269,6 +302,22 @@ class Scheduler:
     # ----------------------------------------------------------- staging
     def _stage_start(self, req: Request):
         buf = self._free_bufs.popleft()
+        if self.executor.prefill_batching:
+            # batched path: no fixed plan — the per-tick packer allocates
+            # chunks; begin is host-only (rows are release-zeroed by the
+            # multi-row scatter, so starting a staging costs no dispatch)
+            T = req.prompt_len
+            C = self.executor.prefill_chunk
+            tail = (T - 1) % C + 1
+            self._stagings.append(_Staging(
+                req=req, plan=[], buf=buf,
+                chunks_left=(T - tail) // C, tail=tail))
+            self.executor.bstage_begin(
+                buf, seed=self.seed, rid=req.rid,
+                temperature=req.temperature, top_k=req.top_k,
+                top_p=req.top_p, eos_id=req.eos_id,
+                budget=req.max_new_tokens)
+            return
         self._stagings.append(_Staging(
             req=req, plan=self.executor.plan_prefill(req.prompt_len),
             buf=buf))
@@ -313,8 +362,138 @@ class Scheduler:
         st = self._stagings.pop(0)
         slot = self.free.popleft()
         self.executor.scatter(slot, st.buf)
+        self.scatter_dispatches += 1
         self._free_bufs.append(st.buf)
         self.active[slot] = st.req
+
+    # --------------------------------------------------- batched staging
+    def _flush_scatter(self, assigns):
+        """One multi-row scatter covering every slot assignment plus the
+        dirty (finished-at-admit) rows; released rows return to the free
+        pool clean."""
+        rows = [row for _, row in assigns]
+        self.executor.bscatter(assigns, self._dirty_rows)
+        self.scatter_dispatches += 1
+        for row in rows:
+            self._free_bufs.append(row)
+        for row in self._dirty_rows:
+            self._free_bufs.append(row)
+        self._dirty_rows.clear()
+
+    def _stage_finish_batch(self, sts: List[_Staging]):
+        """Every request admitted by one batched dispatch syncs its first
+        token from the SAME device-confirmed read and stamps the SAME
+        ``t_first`` — a batch admit is one device event, so serial
+        per-entry stamps would skew TTFT for all but the first row."""
+        toks = np.asarray(self.executor.btoks)      # the one host sync
+        now = time.perf_counter()
+        for st in sts:
+            req = st.req
+            tok = int(toks[st.buf])
+            req.t_first = now
+            req.output.append(tok)
+            if self._finished(req, tok):
+                req.done = True
+                req.t_done = now
+                self._stagings.remove(st)
+                self._dirty_rows.add(st.buf)    # zeroed at next scatter
+            else:
+                st.ready = True
+
+    def _dispatch_batched(self, budget: int) -> bool:
+        """One packed prefill round: walk the staging FIFO oldest-first,
+        allocating each entry up to ``budget`` scan-chunk units (an admit
+        costs one unit), then fuse all allocations into at most one
+        batched scan + one batched admit dispatch per input kind.  The
+        walk never skips past an unfinished older entry once the budget
+        runs out — head-of-line (oldest-first) allocation is the
+        fairness guard: a long staged prompt always drains at full rate,
+        so its dispatch count is bounded by its own chunk count no matter
+        how many short prompts arrive behind it.  Interior chunks are
+        C-quantized (masks cover only tails and placeholder rows), so
+        each prompt's chunk decomposition — and therefore its token
+        stream — is bitwise that of per-prompt dispatch."""
+        scan_e: Dict[bool, list] = {}
+        admit_e: Dict[bool, list] = {}
+        admitted: List[_Staging] = []
+        for st in self._stagings:
+            if st.ready or st.admitted:
+                continue
+            if budget <= 0:
+                break               # strict oldest-first: no skip-ahead
+            is_embeds = st.req.prompt is None
+            if st.chunks_left:
+                take = min(st.chunks_left, self._max_scan_chunks, budget)
+                C = self.executor.prefill_chunk
+                chunk = st.req._inputs[st.prompt_pos:
+                                       st.prompt_pos + take * C]
+                scan_e.setdefault(is_embeds, []).append(
+                    (st.buf, chunk, take))
+                st.prompt_pos += take * C
+                st.chunks_left -= take
+                budget -= take
+            if st.chunks_left == 0 and budget > 0:
+                chunk = st.req._inputs[st.prompt_pos:
+                                       st.prompt_pos + st.tail]
+                admit_e.setdefault(is_embeds, []).append(
+                    (st.buf, chunk, st.tail))
+                st.prompt_pos += st.tail
+                st.admitted = True
+                admitted.append(st)
+                budget -= 1
+        for entries in scan_e.values():
+            self.executor.bstage_chunk_scan(entries)
+            self.stage_dispatches += 1
+        for entries in admit_e.values():
+            self.executor.bstage_admit(entries)
+            self.stage_dispatches += 1
+        if admitted:
+            self._stage_finish_batch(admitted)
+        return bool(scan_e or admit_e)
+
+    def _admit_batched(self):
+        """Batched admit pipeline: per tick, at most ONE multi-row
+        scatter, then new stagings (host-only), then one packed prefill
+        round of at most one batched scan + one batched admit dispatch
+        per input kind — dispatches per tick are O(1) in queue depth.
+        While slots are free the loop drains work-conservingly (same
+        admits as the serialized baseline); under saturation one round
+        per tick keeps the resident slots decoding between prefill
+        programs."""
+        while True:
+            progressed = False
+            # multi-row scatter: every head-run staged-ready request takes
+            # a free slot in one dispatch (FIFO order preserved)
+            assigns = []
+            while self._stagings and self._stagings[0].ready and self.free:
+                st = self._stagings.pop(0)
+                slot = self.free.popleft()
+                assigns.append((slot, st.buf))
+                self.active[slot] = st.req
+            if assigns:
+                self._flush_scatter(assigns)
+                progressed = True
+            # start staging while rows allow; a dirty row blocks a start
+            # only until a release-only scatter cleans it
+            while (self.queue and (self.free or self.overlap)):
+                if not self._free_bufs:
+                    if self._dirty_rows:
+                        self._flush_scatter([])
+                        progressed = True
+                        continue
+                    break
+                self._stage_start(self.queue.popleft())
+                progressed = True
+            # one packed prefill round; infinite budget while a slot is
+            # free (work-conserving parity with the serialized baseline)
+            budget = (self._budget_chunks if not self.free
+                      else 1 << 30)
+            if self._dispatch_batched(budget):
+                progressed = True
+            if not self.free and self.active:
+                return              # saturated: one round per tick
+            if not progressed:
+                return
 
     def _admit(self):
         """Advance the admit pipeline at a tick boundary.
@@ -329,7 +508,15 @@ class Scheduler:
         completion, held staged-ready until slots free (scattered in FIFO
         order).  Overlapped TTFT is therefore never structurally worse
         than serialized, and strictly better whenever a request would
-        have had to wait for a slot before prefilling."""
+        have had to wait for a slot before prefilling.
+
+        With ``prefill_batching`` (the default when every mixer kind
+        supports it) the per-entry loop is replaced by
+        ``_admit_batched``: all staged prompts fuse into one batched
+        program per dispatch and dispatches per tick are O(1) in queue
+        depth."""
+        if self.executor.prefill_batching:
+            return self._admit_batched()
         yielded = set()     # stagings that already dispatched this tick
         while True:
             # FIFO scatter: the head staged-ready request takes the slot
@@ -423,6 +610,7 @@ class Scheduler:
         self.decode_s = 0.0
         self.decoded_tokens = 0
         self.stage_dispatches = 0
+        self.scatter_dispatches = 0
         self._metrics_from = len(self._all)
 
     def metrics(self) -> Dict[str, float]:
@@ -444,9 +632,11 @@ class Scheduler:
             "decode_us_per_token":
                 self.decode_s / max(1, self.decoded_tokens) * 1e6,
             "stage_dispatches": self.stage_dispatches,
+            "scatter_dispatches": self.scatter_dispatches,
             "overlap": int(self.overlap),
             "prefill_chunk": self.executor.prefill_chunk,
             "plan_mode": self.executor.plan_mode,
+            "prefill_batching": int(self.executor.prefill_batching),
             "compiled_programs": progs["total"],
             "prefill_programs": progs["prefill"],
             "staging_depth": self.staging_depth,

@@ -131,10 +131,13 @@ def test_overlap_ahead_of_slot_admit(gdn_model):
     """With every slot busy on long budgets, a queued request prefills
     one chunk dispatch per tick (decode proceeds between chunks) and its
     first token is emitted while the slots are still decoding (before any
-    slot frees) — the TTFT mechanism the overlap exists for."""
+    slot frees) — the TTFT mechanism the overlap exists for.  Pinned to
+    the per-prompt staging path: the batched packer legitimately stages
+    the whole prompt in one tick (see tests/test_batched_prefill.py)."""
     cfg, params = gdn_model
     eng = DecodeEngine(cfg, params, max_slots=2, max_len=64,
-                       decode_block=4, overlap=True, prefill_chunk=8)
+                       decode_block=4, overlap=True, prefill_chunk=8,
+                       prefill_batching=False)
     long = [Request(rid=100 + i, prompt=np.arange(1, 18, dtype=np.int32),
                     max_new_tokens=30) for i in range(2)]
     for r in long:
