@@ -21,7 +21,14 @@ program.  ``--engines N`` fronts N such engines with a host-side router
 (``--router-policy``), each engine on its own slice of the visible
 devices when enough exist.  On CPU, prefix
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to smoke-test a
-topology.  See docs/serving.md.
+topology.
+
+``--swap-policy``/``--idle-swap-ms``/``--max-live-requests`` turn on
+slot oversubscription (state paging): idle or outranked active requests
+are swapped — fixed-size recurrent state + rolling KV window + sampler
+row, straight from ``cache_spec`` — to host memory and resumed later
+through the same slot-scatter program, bitwise-identically.  See
+docs/serving.md.
 """
 from __future__ import annotations
 
@@ -74,7 +81,10 @@ def build_engines(cfg, params, args, topo: ServingTopology):
             staging_depth=topo.staging_depth,
             plan_mode=args.plan_mode,
             prefill_batching=args.prefill_batching,
-            prefill_budget=args.prefill_budget))
+            prefill_budget=args.prefill_budget,
+            swap_policy=args.swap_policy,
+            idle_swap_ms=args.idle_swap_ms,
+            max_live_requests=args.max_live_requests))
     return engines, slots
 
 
@@ -115,6 +125,25 @@ def main():
                     help="per-tick prefill token budget of the batched "
                          "packer under saturation (default: every "
                          "staging row gets a full scan + admit)")
+    ap.add_argument("--swap-policy", default="manual",
+                    choices=("manual", "idle", "pressure", "auto"),
+                    help="slot-oversubscription eviction policy: "
+                         "'manual' (pause/resume/preempt API only), "
+                         "'idle' (swap out active requests whose "
+                         "activity lease exceeds --idle-swap-ms; touch() "
+                         "renews the lease), 'pressure' (evict the "
+                         "lowest-priority active request when a strictly "
+                         "higher-priority request waits without a free "
+                         "slot), 'auto' (both)")
+    ap.add_argument("--idle-swap-ms", type=float, default=None,
+                    help="activity-lease duration for --swap-policy "
+                         "idle/auto: an active request untouched this "
+                         "long is swapped to host, freeing its slot")
+    ap.add_argument("--max-live-requests", type=int, default=None,
+                    help="admission cap on LIVE sessions (queued + "
+                         "staging + active + swapped) per engine — "
+                         "oversubscription bounds host memory, not just "
+                         "device slots (default: unlimited)")
     ap.add_argument("--engines", type=int, default=1,
                     help="number of per-mesh engines behind the router")
     ap.add_argument("--router-policy", default="least_loaded",
@@ -160,6 +189,14 @@ def main():
           f"chunks of {eng.prefill_chunk} ({eng.plan_mode} plans, "
           f"{'batched' if eng.prefill_batching else 'per-prompt'} "
           f"staging)")
+    if args.swap_policy != "manual" or args.max_live_requests:
+        print(f"paging: swap_policy={args.swap_policy}"
+              + (f", idle lease {args.idle_swap_ms:.0f} ms"
+                 if args.idle_swap_ms is not None else "")
+              + (f", max {args.max_live_requests} live sessions/engine"
+                 if args.max_live_requests else "")
+              + f" — {eng.executor.swap_bytes_per_slot / 2**10:.1f} "
+              f"KiB/swap from cache_spec")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 17),
@@ -184,6 +221,13 @@ def main():
     print(f"  per-request means: ttft {m['mean_ttft_s'] * 1e3:.1f} ms, "
           f"latency {m['mean_latency_s'] * 1e3:.1f} ms, "
           f"{m['mean_tokens_per_s']:.1f} tok/s")
+    if m["swap_outs"] or m["swapped"]:
+        us_mb = (m["swap_s"] * 1e6 / (m["swap_bytes"] / 2**20)
+                 if m["swap_bytes"] else 0.0)
+        print(f"  paging: {m['swap_outs']} swap-outs / {m['swap_ins']} "
+              f"swap-ins, {m['swap_bytes'] / 2**20:.2f} MiB moved "
+              f"({us_mb:.0f} us/MiB), {m['swapped']} session(s) parked "
+              f"on host at exit")
     for r in done[:4]:
         print(f"  req {r.rid}: ttft {r.ttft_s * 1e3:.1f} ms, "
               f"{len(r.output)} toks: {list(r.output)}")

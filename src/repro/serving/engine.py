@@ -17,7 +17,21 @@ The engine used to be one module; it is now two layers (see
     shardings — one SPMD program per tick over the whole mesh.
 
 Above the engine, ``repro.serving.router.Router`` fronts one-or-more
-per-mesh engines (placement, rebalance/drain, aggregated metrics).
+per-mesh engines (placement, swap-aware rebalance/drain, aggregated
+metrics).
+
+**Slot oversubscription** (state paging): the engine serves more live
+sessions than device slots.  ``pause(rid)`` gathers a request's whole
+fixed-size device residency (recurrent state + rolling KV window +
+sampler row + last token — all shapes from ``cache_spec``) into a
+host-side ``SwappedState`` and frees the slot; ``resume(rid)`` queues it
+for a slot grant and swap-in re-admits it through the existing
+slot-scatter program, bitwise-identically; ``preempt()`` evicts the
+lowest-priority active request with automatic resume.  The lifecycle
+gains SWAPPED and RESUMING states (``Request.state``), ``swap_policy``
+("manual"/"idle"/"pressure"/"auto" with ``idle_swap_ms``) automates
+eviction, and ``max_live_requests`` caps total admission including
+swapped sessions.  See ``docs/serving.md``.
 
 ``DecodeEngine`` is the backwards-compatible entry point: the PR-2 API
 (``submit`` / ``step`` / ``run_until_done`` / ``metrics``) is unchanged,

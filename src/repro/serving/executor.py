@@ -112,6 +112,60 @@ def _pow2_floor(n: int) -> int:
     return 1 << (n.bit_length() - 1)
 
 
+class SwappedState(NamedTuple):
+    """Host-side image of one request's device residency — what slot
+    oversubscription pages out.  Every mixer's recurrent state is a
+    constant-shape block described by ``cache_spec``, so the image is a
+    fixed-size record, not a paged-KV block table:
+
+    caches  : numpy pytree of ``(repeats, 1, ...)`` leaves — recurrent
+              state + rolling KV window + position meta of every layer
+              group, in exactly the staging layout the slot scatter
+              admits from;
+    sampler : 1-row sampler state (PRNG key mid-stream, remaining
+              budget, done flag — see ``sampling.slice_row``);
+    token   : (1,) int32 — the last emitted token, the next decode
+              input.
+    """
+    caches: Any
+    sampler: Dict[str, np.ndarray]
+    token: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes this image moves across the host boundary per swap."""
+        leaves = (jax.tree.leaves(self.caches)
+                  + list(self.sampler.values()) + [self.token])
+        return int(sum(np.asarray(x).nbytes for x in leaves))
+
+
+def _gather_fn(caches, sampler, tokens, slot):
+    """Slot gather — the inverse of ``_scatter_fn``: slice slot
+    ``slot``'s cache column, sampler row and last token out of the slot
+    buffers into the staging layout, and freeze the vacated slot's done
+    flag so the remaining ticks treat it as inert.  The caches are
+    read-only; only the sampler is donated (for the freeze)."""
+    st = jax.tree.map(
+        lambda f: jax.lax.dynamic_slice_in_dim(f, slot, 1, axis=1),
+        caches)
+    row = sampling.slice_row(sampler, slot)
+    tok = jax.lax.dynamic_slice(tokens, (slot,), (1,))
+    return st, row, tok, sampling.freeze_slot(sampler, slot)
+
+
+def _bgather_fn(bstaging, bsampler, btoks, row):
+    """Staging-row gather for the batched ring: slice row ``row``'s
+    staged caches, admit-advanced sampler row and first token into the
+    (repeats, 1, ...) staging layout ``restore_slot`` re-admits from.
+    Pure read — the row is release-zeroed by the next multi-row
+    scatter (the scheduler marks it dirty)."""
+    st = jax.tree.map(
+        lambda f: jax.lax.dynamic_slice_in_dim(f, row, 1, axis=1),
+        bstaging)
+    return (st, sampling.slice_row(bsampler, row),
+            jax.lax.dynamic_slice(btoks, (row,), (1,)))
+
+
 def _bscatter_fn(caches, sampler, tokens, bstaging, bsampler, btoks,
                  slots, release):
     """Multi-row scatter: admit every finished staging row in ONE
@@ -262,6 +316,13 @@ class DeviceExecutor:
         self.state_bytes_per_slot = slot_spec.state_bytes
         self.window_bytes_per_slot = slot_spec.window_bytes
         self.cache_bytes = self.spec.nbytes
+        # spec-derived swap budget: what one swapped request moves across
+        # the host boundary each direction (cache column + sampler row +
+        # last token) — benchmarks report swap µs/MB against this
+        samp1 = jax.eval_shape(lambda: sampling.init_state(1))
+        self.swap_bytes_per_slot = slot_spec.nbytes + int(sum(
+            np.dtype(x.dtype).itemsize * int(np.prod(x.shape))
+            for x in jax.tree.leaves(samp1))) + 4
 
         self._build_shardings(params)
         self.params = (params if mesh is None else
@@ -303,6 +364,9 @@ class DeviceExecutor:
         self._bscan_p: Dict[bool, object] = {}
         self._badmit_p: Dict[bool, object] = {}
         self._bscatter_p = None
+        # state-paging gathers (lazy — engines that never swap pay nothing)
+        self._gather_p = None
+        self._bgather_p = None
         # donate only the slot buffers: the staging pytree's (repeats, 1,
         # ...) leaves have no same-shape output to alias (XLA would warn)
         self._scatter_p = self._jit(
@@ -790,6 +854,78 @@ class DeviceExecutor:
             self.bsampler, self.btoks, jnp.asarray(slots),
             jnp.asarray(release))
 
+    # ------------------------------------------------------ state paging
+    def _host_state(self, st, row, tok) -> SwappedState:
+        """Fetch a gathered (staging-layout) slice to host memory.  Under
+        a mesh the fetch is the all-gather to one replicated host copy —
+        the swapped image is topology-free, so any engine with the same
+        arch config (any mesh shape) can restore it."""
+        st, row, tok = jax.device_get((st, row, tok))
+        return SwappedState(caches=st, sampler=row, token=np.asarray(tok))
+
+    def gather_slot(self, slot: int) -> SwappedState:
+        """Swap a resident request out of slot ``slot``: ONE program
+        slices its cache column + sampler row + last token (the inverse
+        of the slot scatter) and freezes the vacated slot's done flag,
+        then the slices are fetched to host memory.  The gathered pytree
+        is exactly the staging layout, so ``restore_slot`` re-admits it
+        through the existing slot-scatter program bitwise-identically."""
+        if self._gather_p is None:
+            self._gather_p = self._jit(
+                _gather_fn, donate=(1,),
+                in_sh=(self._sh_caches, self._sh_sampler, self._sh_tokens,
+                       self._sh_rep),
+                out_sh=((self._sh_staging, self._sh_row, self._sh_rep,
+                         self._sh_sampler)
+                        if self.mesh is not None else None))
+        st, row, tok, self.sampler = self._gather_p(
+            self.caches, self.sampler, self.tokens, jnp.int32(slot))
+        return self._host_state(st, row, tok)
+
+    def gather_staging(self, buf: int) -> SwappedState:
+        """Gather per-prompt ring buffer ``buf`` (a staged-ready request
+        pausing at the admit boundary, before its slot scatter): the
+        staging cache, admit-advanced sampler row and first token are
+        already in staging layout — a host fetch, no program.  The
+        buffer returns to the ring dirty (``stage_begin`` re-zeros it)."""
+        sw = self._host_state(self.staging[buf], self.staging_row[buf],
+                              self.staging_tok[buf])
+        self.staging_row[buf] = None
+        self.staging_tok[buf] = None
+        return sw
+
+    def bgather_row(self, row: int) -> SwappedState:
+        """Gather batched staging row ``row`` (the admit-boundary swap on
+        the batched path).  Pure read — the caller marks the row dirty
+        so the next multi-row scatter release-zeroes it."""
+        self._ensure_batched()
+        if self._bgather_p is None:
+            self._bgather_p = self._jit(
+                _bgather_fn,
+                in_sh=(self._sh_bstaging, self._sh_bsampler,
+                       self._sh_btoks, self._sh_rep),
+                out_sh=((self._sh_staging, self._sh_row, self._sh_rep)
+                        if self.mesh is not None else None))
+        st, row_, tok = self._bgather_p(self.bstaging, self.bsampler,
+                                        self.btoks, jnp.int32(row))
+        return self._host_state(st, row_, tok)
+
+    def restore_slot(self, slot: int, sw: SwappedState):
+        """Swap-in: put the host-side ``SwappedState`` back on device in
+        staging layout (re-sharded under a mesh by the scatter's
+        in_shardings) and re-admit it through the EXISTING slot-scatter
+        program — the same donated dynamic_update_slice every fresh
+        admit takes, so a resumed request's slot residency is bitwise
+        what it was at gather time."""
+        st = self._put(jax.tree.map(jnp.asarray, sw.caches),
+                       self._sh_staging)
+        row = self._put({k: jnp.asarray(v) for k, v in sw.sampler.items()},
+                        self._sh_row)
+        tok = self._put(jnp.asarray(sw.token), self._sh_rep)
+        self.caches, self.sampler, self.tokens = self._scatter_p(
+            self.caches, self.sampler, self.tokens, st, row, tok,
+            jnp.int32(slot))
+
     # ----------------------------------------------------------- metrics
     def compiled_programs(self) -> Dict[str, int]:
         """Live jitted-program cache sizes per family.
@@ -810,9 +946,12 @@ class DeviceExecutor:
             "prefill_chunk": len(self._chunk_p),
             "prefill_admit": len(self._admit_p) + len(self._badmit_p),
             "prefill": prefill,
-            # + the slot scatter, + the multi-row scatter once built
+            # + the slot scatter, + the multi-row scatter once built,
+            # + the state-paging gathers once built
             "total": (len(self._decode_p) + prefill + 1
-                      + (1 if self._batched_ready else 0)),
+                      + (1 if self._batched_ready else 0)
+                      + (1 if self._gather_p is not None else 0)
+                      + (1 if self._bgather_p is not None else 0)),
         }
 
     # ------------------------------------------------------------- ticks

@@ -25,6 +25,13 @@ Backlog control:
     requests to the others (scale-down / maintenance); active and staged
     requests finish in place.  ``undrain(i)`` re-admits it.
 
+State paging is routed too: ``pause(rid)`` / ``resume(rid)`` /
+``preempt()`` find the owning engine, and rebalance is swap-aware — a
+resuming request's host-side image is plain numpy in a topology-free
+staging layout, so its resume *claim* can migrate from a slot-full
+engine to one with idle capacity (same arch config + max_len) and be
+restored through the taker's own slot scatter, re-sharded to its mesh.
+
 Requests keep their original ``t_submit`` across migrations, so TTFT
 measures the client's wait, not the router's shuffling.
 """
@@ -77,10 +84,41 @@ class Router:
         self.placed[idx] += 1
         return idx
 
+    # ------------------------------------------------------ state paging
+    def _owner(self, rid: int) -> int:
+        for i, e in enumerate(self.engines):
+            if rid in e.swapped or any(r.rid == rid and not r.done
+                                       for r in e._all):
+                return i
+        raise KeyError(f"no engine owns a live request with rid {rid}")
+
+    def pause(self, rid: int) -> Request:
+        """Swap request ``rid`` out wherever it lives (see
+        ``Scheduler.pause``)."""
+        return self.engines[self._owner(rid)].pause(rid)
+
+    def resume(self, rid: int) -> Request:
+        """Resume a paused request on its owning engine; rebalance may
+        later migrate the claim if that engine is slot-full."""
+        return self.engines[self._owner(rid)].resume(rid)
+
+    def touch(self, rid: int):
+        self.engines[self._owner(rid)].touch(rid)
+
     # --------------------------------------------------------- rebalance
     def _idle_capacity(self, eng: Scheduler) -> int:
-        """Free slots not already claimed by the engine's own backlog."""
-        return len(eng.free) - len(eng.queue) - len(eng._stagings)
+        """Free slots not already claimed by the engine's own backlog
+        (queue, staging ring, or resume queue — a resuming request owns
+        the next freed slot just as surely as a staged-ready one)."""
+        return (len(eng.free) - len(eng.queue) - len(eng._stagings)
+                - len(eng.resume_q))
+
+    def _compatible(self, a: int, b: int) -> bool:
+        """A swapped image restores bitwise only onto an engine with the
+        same arch config and context length (the cache leaves are sized
+        by both); mesh shape may differ — the image is topology-free."""
+        ea, eb = self.engines[a], self.engines[b]
+        return ea.cfg == eb.cfg and ea.max_len == eb.max_len
 
     def _move(self, req: Request, donor: int, taker: int) -> bool:
         """Re-home a withdrawn request, preserving ``t_submit`` (TTFT
@@ -126,6 +164,45 @@ class Router:
             moved += 1
             self.migrated += 1
 
+    def rebalance_swapped(self) -> int:
+        """Move resume-queue claims off slot-full engines onto
+        compatible engines with idle capacity.  Returns the number of
+        migrations.  Runs after ``rebalance`` at every multi-engine
+        step: without it a resumed session is pinned to the engine that
+        swapped it out even while a neighbor idles."""
+        moved = 0
+        while True:
+            donors = [i for i in self._live()
+                      if self.engines[i].resume_q
+                      and not self.engines[i].free]
+            if not donors:
+                return moved
+            donor = max(donors,
+                        key=lambda i: len(self.engines[i].resume_q))
+            takers = [i for i in self._live()
+                      if self._idle_capacity(self.engines[i]) > 0
+                      and self._compatible(donor, i)]
+            if not takers:
+                return moved
+            taker = min(takers,
+                        key=lambda i: (-self._idle_capacity(self.engines[i]),
+                                       i))
+            rec = self.engines[donor].withdraw_swapped()
+            if rec is None:             # raced empty
+                return moved
+            try:
+                self.engines[taker].readmit_swapped(rec)
+            except ValueError as e:
+                self.engines[donor].readmit_swapped(rec)
+                warnings.warn(f"router: engine {taker} rejected migrated "
+                              f"swapped req {rec.req.rid} ({e})",
+                              RuntimeWarning)
+                return moved
+            self.placed[taker] += 1
+            self.placed[donor] -= 1
+            moved += 1
+            self.migrated += 1
+
     def drain(self, idx: int) -> int:
         """Stop placing on engine ``idx`` and migrate its queued requests
         to the remaining engines.  Active/staged requests finish in place.
@@ -155,9 +232,11 @@ class Router:
         return sum(e.load for e in self.engines)
 
     def step(self):
-        """One router tick: rebalance backlog, then tick every engine."""
+        """One router tick: rebalance backlog (queued, then resume
+        claims), then tick every engine."""
         if len(self.engines) > 1:
             self.rebalance()
+            self.rebalance_swapped()
         for eng in self.engines:
             eng.step()
 
@@ -211,6 +290,12 @@ class Router:
             "prefill_batching": int(all(m["prefill_batching"]
                                         for m in per)),
             "compiled_programs": sum(m["compiled_programs"] for m in per),
+            "swap_outs": sum(m["swap_outs"] for m in per),
+            "swap_ins": sum(m["swap_ins"] for m in per),
+            "swapped": sum(m["swapped"] for m in per),
+            "resuming": sum(m["resuming"] for m in per),
+            "swap_s": sum(m["swap_s"] for m in per),
+            "swap_bytes": sum(m["swap_bytes"] for m in per),
             "mean_ttft_s": wmean("mean_ttft_s"),
             "mean_latency_s": wmean("mean_latency_s"),
             "mean_tokens_per_s": wmean("mean_tokens_per_s"),

@@ -130,6 +130,27 @@ def admit_rows(seed, rids, temperature, top_k, top_p, eos_id,
     }
 
 
+def slice_row(state: SamplerState, idx) -> SamplerState:
+    """One-row slice of slot/row ``idx`` — the swap-out inverse of the
+    ``admit_row`` -> scatter path.  The PRNG key, remaining budget and
+    done flag leave the device mid-stream exactly as they are, so
+    re-admitting the row through the slot scatter resumes the draw
+    sequence at the position the request was preempted at (the key is a
+    pure function of (seed, rid, tokens emitted) — never of wall time or
+    slot placement — which is what makes swap/resume bitwise-safe)."""
+    return {k: jax.lax.dynamic_slice_in_dim(v, idx, 1, axis=0)
+            for k, v in state.items()}
+
+
+def freeze_slot(state: SamplerState, slot) -> SamplerState:
+    """Mark ``slot`` done after its request's state was gathered off the
+    device: ``done`` is sticky in ``sample`` (frozen slots neither
+    decrement budgets nor match EOS, and an all-greedy tick skips the
+    stochastic pipeline), so a vacated slot is inert until the next
+    admit scatters a new row over it."""
+    return {**state, "done": state["done"].at[slot].set(True)}
+
+
 # ------------------------------------------------------------- filtering
 
 def _filter_row(logits, temperature, top_k, top_p):

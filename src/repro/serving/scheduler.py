@@ -29,6 +29,25 @@ device buffer directly; it decides *what* to dispatch and *when*:
      masked steps — bucketing bounds the compile cache.
   4. finished slots (device EOS/budget flags) are freed at tick boundaries.
 
+**State paging (slot oversubscription).**  The paper's core claim is
+that a *fixed-size* persistent state is what makes linear-attention
+decode accelerable; the serving analog of on-chip capacity is the slot
+count.  Because every mixer's state is a constant-shape block described
+by ``cache_spec``, an idle request's whole device residency (recurrent
+state + rolling KV window + sampler row + last token) gathers into one
+host-side ``SwappedState`` record — no block tables, no paged KV.
+``pause(rid)`` swaps a request out wherever it is in the lifecycle
+(SWAPPED), ``resume(rid)`` queues it for a slot grant (RESUMING),
+``preempt()`` evicts the lowest-priority active request with automatic
+resume, and ``swap_policy`` runs an idle-lease and/or priority-pressure
+sweep each tick.  Swap-in re-admits through the EXISTING slot-scatter
+program, and the sampler row round-trips the PRNG key mid-stream, so a
+preempted-and-resumed stream is bitwise the uninterrupted one
+(``tests/test_state_paging.py``).  Freed-slot grants alternate between
+the resume queue and staged-ready fresh admits (both FIFO) so neither
+class starves; an engine can thus hold arbitrarily more live sessions
+than ``max_slots`` (capped by ``max_live_requests``).
+
 With ``mesh`` set, the executor allocates every buffer with NamedShardings
 (slot axis on "data", state heads / KV context on "model") and compiles
 every program with explicit in/out shardings — the scheduler logic is
@@ -49,7 +68,17 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.serving.executor import DeviceExecutor, PlanStep
+from repro.serving.executor import DeviceExecutor, PlanStep, SwappedState
+
+
+# request lifecycle states (the serving.md diagram): a request is QUEUED,
+# then STAGING (chunked prefill into the ring), READY (first token drawn,
+# waiting for a slot), ACTIVE (slot-resident, decoding) and DONE — plus
+# the paging states: SWAPPED (device image gathered to host, or paused
+# straight out of the queue) and RESUMING (in the resume queue, waiting
+# for a granted slot to scatter back into)
+QUEUED, STAGING, READY, ACTIVE = "queued", "staging", "ready", "active"
+SWAPPED, RESUMING, DONE = "swapped", "resuming", "done"
 
 
 @dataclass
@@ -63,18 +92,31 @@ class Request:
     top_k: int = 0                      # 0 => disabled
     top_p: float = 1.0                  # 1.0 => disabled
     eos_id: Optional[int] = None
+    priority: int = 0                   # pressure eviction: a strictly
+                                        # higher priority wins a slot
+                                        # from a lower one
     output: List[int] = field(default_factory=list)
     done: bool = False
+    state: str = "new"                  # lifecycle (QUEUED..DONE above)
     # wall-clock stamps (perf_counter seconds), set by the engine
     t_submit: Optional[float] = None
     t_first: Optional[float] = None     # first token device-confirmed
     t_done: Optional[float] = None
+    swapped_s: float = 0.0              # total wall time swapped out
+    _swapped_pre_first_s: float = 0.0   # swapped time before first token
+    t_last_activity: Optional[float] = None  # lease stamp (idle policy):
+                                        # set at submit/activation,
+                                        # refreshed by Scheduler.touch
+    _t_active: Optional[float] = None   # most recent slot activation
 
     @property
     def ttft_s(self) -> Optional[float]:
+        """Submit -> first token, EXCLUDING time the request spent
+        swapped out before it ever reached the device (a paused-then-
+        resumed queued request isn't "waiting", its client left)."""
         if self.t_first is None or self.t_submit is None:
             return None
-        return self.t_first - self.t_submit
+        return self.t_first - self.t_submit - self._swapped_pre_first_s
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -83,8 +125,18 @@ class Request:
         return self.t_done - self.t_submit
 
     @property
-    def tokens_per_s(self) -> Optional[float]:
+    def active_latency_s(self) -> Optional[float]:
+        """Wall latency minus swapped-out time — the denominator for
+        throughput: a request that sat paused for an hour did not decode
+        slowly for an hour."""
         lat = self.latency_s
+        if lat is None:
+            return None
+        return lat - self.swapped_s
+
+    @property
+    def tokens_per_s(self) -> Optional[float]:
+        lat = self.active_latency_s
         if not lat:
             return None
         return len(self.output) / lat
@@ -119,6 +171,19 @@ class _Staging:
     chunks_left: int = 0      # batched path: full C-chunks not yet staged
     tail: int = 0             # batched path: valid tokens in the admit chunk
     admitted: bool = False    # batched path: admit dispatched, token pending
+    pause_pending: bool = False  # pause() hit mid-prefill: swap out at
+                                 # the admit boundary instead of holding
+                                 # the request staged-ready
+
+
+@dataclass(eq=False)
+class _Swapped:
+    """One swapped-out request: its host-side device image (None when it
+    was paused straight out of the queue — nothing was resident to
+    gather) and the wall-clock stamp the swap started at."""
+    req: Request
+    state: Optional[SwappedState]
+    t_swap: float
 
 
 class Scheduler:
@@ -130,12 +195,27 @@ class Scheduler:
                  budget_ticks: bool = True, mesh=None,
                  staging_depth: int = 2, plan_mode: str = "masked",
                  prefill_batching: Optional[bool] = None,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 swap_policy: str = "manual",
+                 idle_swap_ms: Optional[float] = None,
+                 max_live_requests: Optional[int] = None):
         if decode_block < 1:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
         if prefill_budget is not None and prefill_budget < 1:
             raise ValueError(f"prefill_budget must be >= 1 token, got "
                              f"{prefill_budget}")
+        if swap_policy not in ("manual", "idle", "pressure", "auto"):
+            raise ValueError(f"swap_policy must be one of manual/idle/"
+                             f"pressure/auto, got {swap_policy!r}")
+        if swap_policy in ("idle", "auto") and idle_swap_ms is None:
+            raise ValueError(f"swap_policy={swap_policy!r} sweeps idle "
+                             f"leases — set idle_swap_ms")
+        if idle_swap_ms is not None and idle_swap_ms < 0:
+            raise ValueError(f"idle_swap_ms must be >= 0, got "
+                             f"{idle_swap_ms}")
+        if max_live_requests is not None and max_live_requests < 1:
+            raise ValueError(f"max_live_requests must be >= 1, got "
+                             f"{max_live_requests}")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -172,12 +252,26 @@ class Scheduler:
         self._stagings: List[_Staging] = []
         self._free_bufs: Deque[int] = deque(range(self.staging_depth))
         self._dirty_rows: set = set()
+        # state paging: host store of swapped-out requests (rid-keyed —
+        # submit enforces rid uniqueness among live requests) and the
+        # FIFO resume queue of rids waiting for a slot grant
+        self.swap_policy = swap_policy
+        self.idle_swap_ms = idle_swap_ms
+        self.max_live_requests = max_live_requests
+        self.swapped: Dict[int, _Swapped] = {}
+        self.resume_q: Deque[int] = deque()
+        self._grant_resume_next = True
         self.ticks = 0
         self.decode_s = 0.0         # wall time inside decode ticks (+ sync)
         self.decoded_tokens = 0     # tokens emitted by ticks (not admit)
         self.stage_dispatches = 0   # prefill-chunk programs dispatched
         self.scatter_dispatches = 0  # slot-scatter programs dispatched
-        self._metrics_from = 0      # _all watermark set by reset_metrics
+        self.swap_outs = 0          # slot/staging gathers to host
+        self.swap_ins = 0           # restores through the slot scatter
+        self.swap_s = 0.0           # wall time inside swap transfers
+        self.swap_bytes = 0         # bytes moved (both directions)
+        self._metrics_seen: set = set()  # id() of requests already
+                                    # counted before reset_metrics
 
     # ---------------------------------------------------- compat surface
     @property
@@ -262,7 +356,24 @@ class Scheduler:
                 f"req {req.rid}: prompt length {T} exceeds max_len "
                 f"{self.max_len} — the window caches would wrap "
                 f"mid-prompt and silently corrupt the context")
+        # the swap store and resume queue are keyed by rid, so a rid must
+        # be unique among the engine's LIVE requests (finished rids may
+        # recur — sessions reconnect)
+        if req.rid in self.swapped or any(
+                r.rid == req.rid and not r.done for r in self._all):
+            raise ValueError(f"req {req.rid}: rid already live on this "
+                             f"engine (swap bookkeeping is rid-keyed)")
+        if self.max_live_requests is not None:
+            live = (len(self.queue) + len(self._stagings)
+                    + len(self.active) + len(self.swapped))
+            if live >= self.max_live_requests:
+                raise RuntimeError(
+                    f"max_live_requests={self.max_live_requests} reached "
+                    f"({live} live incl. swapped): admission refused — "
+                    f"oversubscription caps host memory, not just slots")
         req.t_submit = time.perf_counter()
+        req.t_last_activity = req.t_submit
+        req.state = QUEUED
         self.queue.append(req)
         self._all.append(req)
 
@@ -276,12 +387,9 @@ class Scheduler:
             return None
         req = self.queue.popleft() if oldest else self.queue.pop()
         # identity removal (Request is a dataclass; two equal-field
-        # requests must not alias), keeping the reset_metrics watermark
-        # pointed at the same element
+        # requests must not alias)
         idx = next(i for i, r in enumerate(self._all) if r is req)
         del self._all[idx]
-        if idx < self._metrics_from:
-            self._metrics_from -= 1
         return req
 
     def readmit(self, req: Request):
@@ -290,18 +398,260 @@ class Scheduler:
         self.queue.append(req)
         self._all.append(req)
 
+    def withdraw_swapped(self) -> Optional[_Swapped]:
+        """Remove and return the *newest* resuming request's swap record
+        (request + host-side device image), or None.  The image is plain
+        host numpy in the topology-free staging layout, so the router
+        can migrate a resume claim to any engine with the same arch
+        config — swap-aware rebalance.  Newest-first keeps the FIFO head
+        of this engine's resume queue (same rationale as ``withdraw``)."""
+        if not self.resume_q:
+            return None
+        rid = self.resume_q.pop()
+        rec = self.swapped.pop(rid)
+        idx = next(i for i, r in enumerate(self._all)
+                   if r is rec.req)
+        del self._all[idx]
+        return rec
+
+    def readmit_swapped(self, rec: _Swapped):
+        """Adopt a migrated swap record: the request joins this engine's
+        resume queue and its image is restored through this engine's
+        slot scatter at the next grant (re-sharded to this engine's mesh
+        by ``restore_slot``)."""
+        if rec.req.rid in self.swapped or any(
+                r.rid == rec.req.rid and not r.done for r in self._all):
+            raise ValueError(f"req {rec.req.rid}: rid already live on "
+                             f"this engine")
+        self._all.append(rec.req)
+        self.swapped[rec.req.rid] = rec
+        self.resume_q.append(rec.req.rid)
+        rec.req.state = RESUMING
+
     @property
     def load(self) -> int:
-        """Requests this engine still owes work to (router placement)."""
-        return len(self.active) + len(self.queue) + len(self._stagings)
+        """Requests this engine still owes work to (router placement).
+        Resuming requests claim a slot grant; dormant swapped ones cost
+        only host memory and are excluded."""
+        return (len(self.active) + len(self.queue) + len(self._stagings)
+                + len(self.resume_q))
 
     def _finished(self, req: Request, tok: int) -> bool:
         return (len(req.output) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id))
 
+    # ------------------------------------------------------ state paging
+    def pause(self, rid: int) -> Request:
+        """Swap request ``rid`` out of device residency (its client went
+        idle).  Wherever the request is in the lifecycle:
+
+          * active       -> ONE gather program slices its cache column,
+                            sampler row and last token to host; the slot
+                            is freed;
+          * staged-ready -> its staging row/buffer is gathered — it
+                            never takes a slot;
+          * mid-prefill  -> marked pause-pending: the chunk plan finishes
+                            first and the swap happens at the admit
+                            boundary (a partial prefill has no
+                            admit-advanced sampler row to gather);
+          * queued       -> removed from the queue; nothing is resident,
+                            so the record's device image is None;
+          * resuming     -> dropped from the resume queue back to
+                            dormant (its image stays on host).
+
+        The request stays dormant until ``resume(rid)``; dormant
+        requests do not block ``run_until_done``."""
+        if rid in self.swapped:
+            rec = self.swapped[rid]
+            if rid in self.resume_q:
+                self.resume_q.remove(rid)
+                rec.req.state = SWAPPED
+                return rec.req
+            raise ValueError(f"req {rid} is already swapped out")
+        for slot, req in self.active.items():
+            if req.rid == rid:
+                return self._swap_out_active(slot)
+        for st in self._stagings:
+            if st.req.rid == rid:
+                if st.ready:
+                    self._swap_out_ready(st)
+                else:
+                    st.pause_pending = True
+                return st.req
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue = deque(r for r in self.queue if r is not req)
+                self.swapped[rid] = _Swapped(
+                    req=req, state=None, t_swap=time.perf_counter())
+                req.state = SWAPPED
+                return req
+        raise KeyError(f"no live request with rid {rid} to pause")
+
+    def resume(self, rid: int) -> Request:
+        """Bring a paused request back.  One that was swapped from the
+        queue (no device image) rejoins the queue tail and re-prefills;
+        one with a gathered image joins the resume queue and is swapped
+        into the next granted slot — oldest-first, alternating fairly
+        with staged-ready fresh admits.  A pending pause that has not
+        reached its admit boundary yet is simply cancelled."""
+        rec = self.swapped.get(rid)
+        if rec is None:
+            for st in self._stagings:
+                if st.req.rid == rid and st.pause_pending:
+                    st.pause_pending = False
+                    return st.req
+            raise KeyError(f"req {rid} is not swapped out")
+        if rid in self.resume_q:
+            raise ValueError(f"req {rid} is already resuming")
+        req = rec.req
+        if rec.state is None:
+            now = time.perf_counter()
+            req.swapped_s += now - rec.t_swap
+            req._swapped_pre_first_s += now - rec.t_swap
+            del self.swapped[rid]
+            self.queue.append(req)
+            req.state = QUEUED
+            req.t_last_activity = now
+        else:
+            self.resume_q.append(rid)
+            req.state = RESUMING
+        return req
+
+    def preempt(self, rid: Optional[int] = None) -> Optional[Request]:
+        """Evict an active request to host memory and queue it for
+        automatic resume.  With ``rid`` the victim is explicit;
+        otherwise the policy victim: lowest priority, ties broken by
+        most recent slot activation (the oldest resident is evicted
+        last — re-prefill/requeue work already sunk is protected).
+        Returns the evicted request, or None when no slot is occupied."""
+        if rid is not None:
+            for slot, req in self.active.items():
+                if req.rid == rid:
+                    return self._swap_out_active(slot, resume=True)
+            raise KeyError(f"req {rid} is not active")
+        if not self.active:
+            return None
+        return self._swap_out_active(self._victim_slot(), resume=True)
+
+    def touch(self, rid: int):
+        """Refresh request ``rid``'s activity lease — the idle policy
+        swaps out active requests whose lease is older than
+        ``idle_swap_ms``; a connected client calls this to keep its
+        slot."""
+        for r in self._all:
+            if r.rid == rid and not r.done:
+                r.t_last_activity = time.perf_counter()
+                return
+        raise KeyError(f"no live request with rid {rid}")
+
+    def _victim_slot(self) -> int:
+        return min(self.active,
+                   key=lambda s: (self.active[s].priority,
+                                  -(self.active[s]._t_active or 0.0)))
+
+    def _swap_out_active(self, slot: int, *, resume: bool = False):
+        req = self.active.pop(slot)
+        t0 = time.perf_counter()
+        sw = self.executor.gather_slot(slot)
+        t1 = time.perf_counter()
+        self.swap_s += t1 - t0
+        self.swap_outs += 1
+        self.swap_bytes += sw.nbytes
+        self.free.append(slot)
+        self.swapped[req.rid] = _Swapped(req=req, state=sw, t_swap=t1)
+        if resume:
+            self.resume_q.append(req.rid)
+            req.state = RESUMING
+        else:
+            req.state = SWAPPED
+        return req
+
+    def _swap_out_ready(self, st: _Staging):
+        """Admit-boundary swap: the request has its first token and an
+        advanced sampler row, but no slot — gather the staging row
+        instead of a slot column."""
+        req = st.req
+        t0 = time.perf_counter()
+        if self.executor.prefill_batching:
+            sw = self.executor.bgather_row(st.buf)
+            self._dirty_rows.add(st.buf)  # release-zeroed, then freed
+        else:
+            sw = self.executor.gather_staging(st.buf)
+            self._free_bufs.append(st.buf)
+        t1 = time.perf_counter()
+        self.swap_s += t1 - t0
+        self.swap_outs += 1
+        self.swap_bytes += sw.nbytes
+        self._stagings.remove(st)
+        self.swapped[req.rid] = _Swapped(req=req, state=sw, t_swap=t1)
+        req.state = SWAPPED
+
+    def _swap_in(self, rid: int, slot: int):
+        rec = self.swapped.pop(rid)
+        req = rec.req
+        t0 = time.perf_counter()
+        self.executor.restore_slot(slot, rec.state)
+        self.scatter_dispatches += 1
+        now = time.perf_counter()
+        self.swap_s += now - t0
+        self.swap_ins += 1
+        self.swap_bytes += rec.state.nbytes
+        req.swapped_s += now - rec.t_swap
+        self.active[slot] = req
+        req.state = ACTIVE
+        req._t_active = now
+        req.t_last_activity = now
+
+    def _grant_resume(self) -> bool:
+        """True when the next freed slot goes to the resume queue rather
+        than a staged-ready fresh admit.  When both classes wait, grants
+        strictly alternate — neither resumed sessions nor fresh prompts
+        starve the other."""
+        if not self.resume_q:
+            return False
+        if not (self._stagings and self._stagings[0].ready):
+            return True
+        return self._grant_resume_next
+
+    def _apply_swap_policy(self):
+        """Tick-boundary eviction sweep (``swap_policy != "manual"``).
+
+        idle: an active request whose lease (``t_last_activity``) is
+        older than ``idle_swap_ms`` is swapped out dormant — the serving
+        analog of a chat session gone quiet; it re-enters via
+        ``resume``.
+
+        pressure: while a *strictly* higher-priority request waits
+        (resume queue, staged-ready or queued) without a free slot, the
+        lowest-priority active request is evicted to the resume queue.
+        Strict inequality is the anti-thrash guard: equal priorities
+        never displace each other."""
+        now = time.perf_counter()
+        if self.swap_policy in ("idle", "auto"):
+            cutoff = self.idle_swap_ms / 1e3
+            for slot in [s for s, r in self.active.items()
+                         if now - r.t_last_activity > cutoff]:
+                self._swap_out_active(slot)
+        if self.swap_policy in ("pressure", "auto"):
+            while self.active:
+                waiting = sorted(
+                    [self.swapped[r].req.priority for r in self.resume_q]
+                    + [s.req.priority for s in self._stagings if s.ready]
+                    + [r.priority for r in self.queue], reverse=True)
+                if len(self.free) >= len(waiting):
+                    break
+                # highest-priority waiter not already covered by a free
+                # slot; each eviction frees one, so the walk terminates
+                need = waiting[len(self.free)]
+                slot = self._victim_slot()
+                if need <= self.active[slot].priority:
+                    break
+                self._swap_out_active(slot, resume=True)
+
     # ----------------------------------------------------------- staging
     def _stage_start(self, req: Request):
         buf = self._free_bufs.popleft()
+        req.state = STAGING
         if self.executor.prefill_batching:
             # batched path: no fixed plan — the per-tick packer allocates
             # chunks; begin is host-only (rows are release-zeroed by the
@@ -352,11 +702,16 @@ class Scheduler:
         req.output.append(tok)
         if self._finished(req, tok):
             req.done = True
+            req.state = DONE
             req.t_done = req.t_first
             self._stagings.remove(st)
             self._free_bufs.append(st.buf)
             return
+        if st.pause_pending:
+            self._swap_out_ready(st)    # the admit-boundary swap
+            return
         st.ready = True
+        req.state = READY
 
     def _stage_scatter(self):
         st = self._stagings.pop(0)
@@ -365,6 +720,13 @@ class Scheduler:
         self.scatter_dispatches += 1
         self._free_bufs.append(st.buf)
         self.active[slot] = st.req
+        self._activate(st.req)
+
+    def _activate(self, req: Request):
+        req.state = ACTIVE
+        now = time.perf_counter()
+        req._t_active = now
+        req.t_last_activity = now
 
     # --------------------------------------------------- batched staging
     def _flush_scatter(self, assigns):
@@ -394,11 +756,15 @@ class Scheduler:
             req.output.append(tok)
             if self._finished(req, tok):
                 req.done = True
+                req.state = DONE
                 req.t_done = now
                 self._stagings.remove(st)
                 self._dirty_rows.add(st.buf)    # zeroed at next scatter
+            elif st.pause_pending:
+                self._swap_out_ready(st)        # the admit-boundary swap
             else:
                 st.ready = True
+                req.state = READY
 
     def _dispatch_batched(self, budget: int) -> bool:
         """One packed prefill round: walk the staging FIFO oldest-first,
@@ -462,14 +828,26 @@ class Scheduler:
         programs."""
         while True:
             progressed = False
-            # multi-row scatter: every head-run staged-ready request takes
-            # a free slot in one dispatch (FIFO order preserved)
+            # slot grants: resume-queue swap-ins (restore through the
+            # slot scatter, oldest first) interleave with the multi-row
+            # scatter of head-run staged-ready requests — when both
+            # classes wait, grants strictly alternate (FIFO within each)
             assigns = []
-            while self._stagings and self._stagings[0].ready and self.free:
-                st = self._stagings.pop(0)
-                slot = self.free.popleft()
-                assigns.append((slot, st.buf))
-                self.active[slot] = st.req
+            while self.free and (self.resume_q
+                                 or (self._stagings
+                                     and self._stagings[0].ready)):
+                if self._grant_resume():
+                    self._swap_in(self.resume_q.popleft(),
+                                  self.free.popleft())
+                    self._grant_resume_next = False
+                    progressed = True
+                else:
+                    st = self._stagings.pop(0)
+                    slot = self.free.popleft()
+                    assigns.append((slot, st.buf))
+                    self.active[slot] = st.req
+                    self._activate(st.req)
+                    self._grant_resume_next = True
             if assigns:
                 self._flush_scatter(assigns)
                 progressed = True
@@ -519,10 +897,17 @@ class Scheduler:
             return self._admit_batched()
         yielded = set()     # stagings that already dispatched this tick
         while True:
+            # resume swap-ins share freed slots with the FIFO scatter of
+            # staged-ready requests (strict alternation under contention)
+            if self.free and self._grant_resume():
+                self._swap_in(self.resume_q.popleft(), self.free.popleft())
+                self._grant_resume_next = False
+                continue
             # FIFO scatter: the head staged-ready request takes the slot
             if self._stagings and self._stagings[0].ready:
                 if self.free:
                     self._stage_scatter()
+                    self._grant_resume_next = True
                     continue    # next queued request may start staging
             # start staging while ring buffers allow (serialized admit
             # waits for a free slot up front)
@@ -563,6 +948,8 @@ class Scheduler:
         ahead-of-slot staged prefills when every slot is busy), then one
         fused decode+sample scan, then emit and free — a single host sync
         for the decode block."""
+        if self.swap_policy != "manual":
+            self._apply_swap_policy()
         self._admit()
         if not self.active:
             return
@@ -581,6 +968,7 @@ class Scheduler:
                 self.decoded_tokens += 1
                 if self._finished(req, tok):
                     req.done = True
+                    req.state = DONE
                     req.t_done = now
                     del self.active[slot]
                     self.free.append(slot)
@@ -588,15 +976,22 @@ class Scheduler:
 
     def run_until_done(self, max_ticks: int = 10_000, *,
                        strict: bool = True) -> List[Request]:
+        """Tick until queue, staging ring, slots and resume queue drain.
+        Dormant swapped-out requests (paused without resume) are NOT
+        pending work — the loop returns with them still parked on
+        host."""
         for _ in range(max_ticks):
-            if not self.queue and not self.active and not self._stagings:
+            if (not self.queue and not self.active and not self._stagings
+                    and not self.resume_q):
                 break
             self.step()
-        if self.queue or self.active or self._stagings:
+        if (self.queue or self.active or self._stagings
+                or self.resume_q):
             msg = (f"run_until_done: max_ticks={max_ticks} exhausted with "
                    f"{len(self.queue)} queued, {len(self.active)} active, "
-                   f"{len(self._stagings)} staging request(s) "
-                   f"unfinished — raise max_ticks or inspect the engine")
+                   f"{len(self._stagings)} staging, {len(self.resume_q)} "
+                   f"resuming request(s) unfinished — raise max_ticks or "
+                   f"inspect the engine")
             if strict:
                 raise RuntimeError(msg)
             warnings.warn(msg, RuntimeWarning)
@@ -605,18 +1000,29 @@ class Scheduler:
     # ----------------------------------------------------------- metrics
     def reset_metrics(self):
         """Zero the aggregate counters (benchmarks call this after a
-        warm-up pass so compile time stays out of the measurement)."""
+        warm-up pass so compile time stays out of the measurement).
+
+        The per-request window is marked by *completion*, not by
+        submission: a request submitted (or paused) before the reset
+        that finishes after it still counts.  The old watermark over
+        ``_all`` assumed submit -> finish was one slot residency; a
+        request can now sit swapped out across a reset."""
         self.ticks = 0
         self.decode_s = 0.0
         self.decoded_tokens = 0
         self.stage_dispatches = 0
         self.scatter_dispatches = 0
-        self._metrics_from = len(self._all)
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swap_s = 0.0
+        self.swap_bytes = 0
+        self._metrics_seen = {id(r) for r in self._all if r.done}
 
     def metrics(self) -> Dict[str, float]:
         """Aggregate serving metrics over requests completed since the
         last ``reset_metrics`` (all requests by default)."""
-        done = [r for r in self._all[self._metrics_from:] if r.done]
+        done = [r for r in self._all
+                if r.done and id(r) not in self._metrics_seen]
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
         lats = [r.latency_s for r in done if r.latency_s is not None]
         tps = [r.tokens_per_s for r in done if r.tokens_per_s is not None]
@@ -640,6 +1046,16 @@ class Scheduler:
             "compiled_programs": progs["total"],
             "prefill_programs": progs["prefill"],
             "staging_depth": self.staging_depth,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "swapped": len(self.swapped),
+            "resuming": len(self.resume_q),
+            "swap_s": self.swap_s,
+            "swap_bytes": self.swap_bytes,
+            "swap_us_per_mb": (self.swap_s * 1e6
+                               / (self.swap_bytes / 2 ** 20)
+                               if self.swap_bytes else 0.0),
+            "swap_bytes_per_slot": self.executor.swap_bytes_per_slot,
             "mesh_data": int(mesh.shape["data"]) if mesh is not None else 1,
             "mesh_model": (int(mesh.shape["model"])
                            if mesh is not None else 1),

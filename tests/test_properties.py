@@ -133,3 +133,165 @@ def test_attn_decode_length_property(seed, frac):
     vc2 = jnp.where(mask, noise, vc)
     o2 = ops.attn_decode(q, kc2, vc2, length, block_t=64)
     np.testing.assert_allclose(o1, o2, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------ serving paging lifecycle (stateful)
+
+stateful = pytest.importorskip("hypothesis.stateful")
+import itertools
+
+from repro import configs
+from repro.models import lm
+from repro.serving.engine import DecodeEngine, Request
+
+_PAGING = {}
+
+
+def _paging_engine():
+    """One shared engine for every stateful example: jit caches key on
+    per-engine closures, so a fresh engine per example would recompile
+    every program dozens of times over.  Each example starts by draining
+    whatever the previous one left behind."""
+    if "eng" not in _PAGING:
+        cfg = configs.get_arch("qwen3-next-gdn").reduced()
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        _PAGING["eng"] = DecodeEngine(cfg, params, max_slots=2,
+                                      max_len=32, decode_block=2,
+                                      prefill_chunk=8, staging_depth=2)
+        _PAGING["rid"] = itertools.count()
+    return _PAGING["eng"], _PAGING["rid"]
+
+
+class PagingLifecycleMachine(stateful.RuleBasedStateMachine):
+    """Random submit/step/pause/resume/preempt interleavings must keep
+    the oversubscribed scheduler's bookkeeping sound:
+
+      * every slot is singly occupied (active ∪ free partitions slots);
+      * every live request has exactly ONE home — queue, staging ring,
+        a slot, or the swap store — never zero, never two;
+      * swapped rids are disjoint from everything device-resident, and
+        the resume queue is a duplicate-free subset of the swap store;
+      * the resume queue is FIFO: grants only ever pop the oldest claim
+        (the engine's queue is always a suffix of the order claims were
+        filed);
+      * no request is lost or duplicated: once everything parked is
+        reconnected, every submitted request finishes exactly once."""
+
+    def __init__(self):
+        super().__init__()
+        self.eng, self.rids = _paging_engine()
+        self._drain_previous()
+        self.submitted = []
+        self.resume_order = []
+
+    def _drain_previous(self):
+        eng = self.eng
+        for s in eng._stagings:
+            s.pause_pending = False
+        for _ in range(300):
+            for rid in list(eng.swapped):
+                if rid not in eng.resume_q:
+                    eng.resume(rid)
+            if not (eng.queue or eng.active or eng._stagings
+                    or eng.resume_q or eng.swapped):
+                return
+            eng.step()
+        raise AssertionError("engine did not drain between examples")
+
+    def _dormant(self):
+        return [rid for rid in self.eng.swapped
+                if rid not in self.eng.resume_q]
+
+    # -------------------------------------------------------------- rules
+    @stateful.rule(n_prompt=st.integers(2, 9), budget=st.integers(1, 6))
+    def submit(self, n_prompt, budget):
+        if sum(1 for r in self.eng._all if not r.done) >= 8:
+            return                          # bound the live population
+        req = Request(rid=next(self.rids),
+                      prompt=np.arange(1, n_prompt + 1, dtype=np.int32),
+                      max_new_tokens=budget)
+        self.eng.submit(req)
+        self.submitted.append(req)
+
+    @stateful.rule()
+    def step(self):
+        self.eng.step()
+
+    @stateful.rule(data=st.data())
+    def pause(self, data):
+        dormant = set(self._dormant())
+        live = [r for r in self.eng._all
+                if not r.done and r.rid not in dormant]
+        if not live:
+            return
+        rid = data.draw(st.sampled_from([r.rid for r in live]),
+                        label="pause rid")
+        if rid in self.resume_order:        # resuming -> back to dormant
+            self.resume_order.remove(rid)
+        self.eng.pause(rid)
+
+    @stateful.rule(data=st.data())
+    def resume(self, data):
+        dormant = self._dormant()
+        if not dormant:
+            return
+        rid = data.draw(st.sampled_from(sorted(dormant)),
+                        label="resume rid")
+        self.eng.resume(rid)
+        if rid in self.eng.resume_q:        # image-backed: files a claim
+            self.resume_order.append(rid)
+
+    @stateful.rule()
+    def preempt(self):
+        req = self.eng.preempt()
+        if req is not None:
+            self.resume_order.append(req.rid)
+
+    # --------------------------------------------------------- invariants
+    @stateful.invariant()
+    def slots_singly_occupied(self):
+        eng = self.eng
+        assert not set(eng.active) & set(eng.free)
+        assert len(set(eng.free)) == len(eng.free)
+        assert len(eng.active) + len(eng.free) == eng.max_slots
+
+    @stateful.invariant()
+    def one_home_per_live_request(self):
+        eng = self.eng
+        homes = ([id(r) for r in eng.queue]
+                 + [id(s.req) for s in eng._stagings]
+                 + [id(r) for r in eng.active.values()]
+                 + [id(rec.req) for rec in eng.swapped.values()])
+        assert len(homes) == len(set(homes)), "request in two structures"
+        assert set(homes) == {id(r) for r in eng._all if not r.done}, \
+            "live request lost (or a done one retained)"
+
+    @stateful.invariant()
+    def swapped_disjoint_from_device(self):
+        eng = self.eng
+        swapped = set(eng.swapped)
+        assert swapped.isdisjoint(r.rid for r in eng.active.values())
+        assert swapped.isdisjoint(s.req.rid for s in eng._stagings)
+        assert swapped.isdisjoint(r.rid for r in eng.queue)
+        assert set(eng.resume_q) <= swapped
+        assert len(set(eng.resume_q)) == len(eng.resume_q)
+
+    @stateful.invariant()
+    def resume_queue_is_fifo(self):
+        rq = list(self.eng.resume_q)
+        tail = self.resume_order[len(self.resume_order) - len(rq):] \
+            if rq else []
+        assert rq == tail, "resume grants must pop oldest-first"
+        self.resume_order = rq
+
+    def teardown(self):
+        self._drain_previous()
+        for req in self.submitted:
+            assert req.done, f"req {req.rid} lost"
+            assert 1 <= len(req.output) <= req.max_new_tokens
+
+
+PagingLifecycleMachine.TestCase.settings = hypothesis.settings(
+    max_examples=12, stateful_step_count=25, deadline=None,
+    suppress_health_check=list(hypothesis.HealthCheck))
+test_serving_paging_lifecycle = PagingLifecycleMachine.TestCase

@@ -429,3 +429,100 @@ def test_sharded_serving_subprocess():
                            os.path.abspath(__file__))), timeout=1800)
     assert "SUBPROCESS_MESH_OK" in r.stdout, \
         r.stdout[-2000:] + r.stderr[-4000:]
+
+
+# ------------------------------------ state paging under a mesh (subproc)
+
+SUBPROCESS_PAGING_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import numpy as np
+    from repro import configs
+    from repro.models import lm
+    from repro.serving.engine import DecodeEngine, Request
+
+    cfg = configs.get_arch("qwen3-next-gdn").reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+
+    def reqs():
+        # rid 0 — the paused one — samples stochastically: the swapped
+        # image must round-trip the PRNG key mid-stream
+        return [Request(rid=i,
+                        prompt=np.arange(1, 7 + 3 * i, dtype=np.int32),
+                        max_new_tokens=6 + i,
+                        temperature=0.8 if i % 2 == 0 else 0.0,
+                        top_k=10 if i % 2 == 0 else 0,
+                        top_p=0.9 if i % 2 == 0 else 1.0)
+                for i in range(6)]
+
+    def serve(mesh, paged):
+        eng = DecodeEngine(cfg, params, max_slots=4, max_len=64,
+                           decode_block=4, prefill_chunk=8, mesh=mesh)
+        rr = reqs()
+        for q in rr:
+            eng.submit(q)
+        if paged:
+            for _ in range(50):
+                eng.step()
+                if rr[0].state == "active" and len(rr[0].output) >= 2:
+                    break
+            assert rr[0].state == "active", rr[0].state
+            eng.pause(0)
+            sw = eng.swapped[0].state
+            # gathered under a mesh, the host image is plain replicated
+            # numpy — topology-free, restorable on any same-cfg engine
+            assert all(isinstance(x, np.ndarray)
+                       for x in jax.tree.leaves(sw.caches))
+            eng.step()
+            eng.resume(0)
+        eng.run_until_done()
+        assert all(q.done for q in rr)
+        return eng, [list(q.output) for q in rr]
+
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                          devices=jax.devices()[:1])
+    mesh4 = jax.make_mesh((4, 1), ("data", "model"),
+                          devices=jax.devices()[:4])
+
+    # --- 1. bitwise parity: pause/resume on a 1-device mesh AND a
+    #        4-device data-sharded mesh both reproduce the uninterrupted
+    #        1-device streams exactly
+    _, base = serve(mesh1, False)
+    for mesh in (mesh1, mesh4):
+        _, out = serve(mesh, True)
+        assert out == base, (out, base)
+
+    # --- 2. placement restored leaf-by-leaf: after a swap-out/swap-in
+    #        round trip every slot buffer carries the same NamedSharding
+    #        spec as an engine that never swapped
+    eng_ref, _ = serve(mesh4, False)
+    eng_sw, _ = serve(mesh4, True)
+    ref = [l.sharding.spec
+           for l in jax.tree.leaves(eng_ref.executor.caches)]
+    got = [l.sharding.spec
+           for l in jax.tree.leaves(eng_sw.executor.caches)]
+    assert got == ref, list(zip(got, ref))[:4]
+    assert (eng_sw.executor.tokens.sharding.spec
+            == eng_ref.executor.tokens.sharding.spec)
+    for k in eng_sw.executor.sampler:
+        assert (eng_sw.executor.sampler[k].sharding.spec
+                == eng_ref.executor.sampler[k].sharding.spec), k
+    m = eng_sw.metrics()
+    assert m["swap_outs"] >= 1 and m["swap_ins"] >= 1
+    assert m["swap_bytes"] >= 2 * eng_sw.executor.swap_bytes_per_slot
+    print("SUBPROCESS_PAGING_OK")
+""")
+
+
+def test_sharded_swap_subprocess():
+    """Swap/resume on a data-sharded mesh: bitwise parity with the
+    1-device run, and sharding placement restored leaf-by-leaf."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SUBPROCESS_PAGING_TEST],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=1800)
+    assert "SUBPROCESS_PAGING_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-4000:]

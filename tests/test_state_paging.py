@@ -1,0 +1,648 @@
+"""State paging (slot oversubscription): swap/resume must never change
+a token.
+
+The paper's capacity argument is that linear-attention state is a
+*fixed-size* block — the serving analog is that a request's whole device
+residency (recurrent state + rolling KV window + sampler row + last
+token, all shapes from ``cache_spec``) gathers into one host record and
+restores through the existing slot scatter.  Gather is a
+``dynamic_slice`` and restore a ``dynamic_update_slice`` of the same
+dtype, the PRNG key is (seed, rid)-folded and round-trips mid-stream,
+and decode is Markov in (state, last token, sampler row) — so a
+preempted-and-resumed stream is bitwise the uninterrupted one.  Pinned
+here, per mixer family:
+
+  * pause mid-decode + resume == uninterrupted, greedy AND stochastic,
+    for all five mixer kinds + gdn_naive (co-resident streams also
+    unchanged — a swap never perturbs its neighbors);
+  * swap at the prefill→decode admit boundary (staged-ready, never held
+    a slot) on both the batched and per-prompt staging paths, plus the
+    deferred mid-prefill pause (``pause_pending``) and its cancellation;
+  * swap of a request whose rolling-window attn cache has wrapped;
+  * preempt/priority-pressure/idle-lease policies, grant fairness, and
+    repeated swap cycles all converge to the dedicated-slot streams;
+  * swap-aware metrics: TTFT and tokens/s exclude swapped-out wall
+    time; ``reset_metrics`` marks the window by completion so a request
+    parked across a reset still counts (the old submit-index watermark
+    lost it);
+  * lifecycle errors: rid-keyed bookkeeping rejects duplicates, paging
+    verbs reject wrong-state targets, ``max_live_requests`` caps
+    admission including swapped sessions.
+"""
+import os
+import time
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serving import scheduler as sched
+from repro.serving.engine import DecodeEngine, Request, Router
+from repro.serving.executor import SwappedState
+
+ARCHS = {
+    "gdn": "qwen3-next-gdn",
+    "ssm": "mamba2-1.3b",
+    "rglru": "recurrentgemma-2b",
+    "attn": "yi-9b",
+    "swa": "h2o-danube-1.8b",
+}
+KINDS = list(ARCHS) + ["gdn_naive"]
+
+_MODELS = {}
+
+
+def _model(kind):
+    if kind not in _MODELS:
+        cfg = configs.get_arch(ARCHS.get(kind, ARCHS["gdn"])).reduced()
+        if os.environ.get("REPRO_PALLAS_SERVING") == "1":
+            cfg = cfg.replace(use_pallas_serving=True)
+        if kind == "gdn_naive":
+            cfg = cfg.replace(pattern=tuple(
+                "gdn_naive" if k == "gdn" else k for k in cfg.pattern))
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        _MODELS[kind] = (cfg, params)
+    return _MODELS[kind]
+
+
+def _engine(kind, **kw):
+    cfg, params = _model(kind)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("decode_block", 2)
+    kw.setdefault("prefill_chunk", 8)
+    return DecodeEngine(cfg, params, **kw)
+
+
+def _reqs(n, stochastic, max_new=8):
+    # rid 0 — the request every test pauses — is stochastic when asked:
+    # the PRNG-key round-trip is the fragile part of the swap
+    return [Request(rid=i, prompt=np.arange(1, 7 + 3 * i, dtype=np.int32),
+                    max_new_tokens=max_new + i,
+                    temperature=0.8 if stochastic and i % 2 == 0 else 0.0,
+                    top_k=10 if stochastic and i % 2 == 0 else 0,
+                    top_p=0.9 if stochastic and i % 2 == 0 else 1.0)
+            for i in range(n)]
+
+
+def _drain(eng, reqs, max_ticks=500):
+    """Run to completion, reconnecting any parked session (idle-policy
+    runs park sessions dormant; every resume must still finish them)."""
+    for _ in range(max_ticks):
+        if all(r.done for r in reqs):
+            return
+        for rid in list(eng.swapped):
+            if rid not in eng.resume_q:
+                eng.resume(rid)
+        eng.step()
+    raise AssertionError("drain did not converge")
+
+
+def _streams(reqs):
+    return [list(r.output) for r in reqs]
+
+
+def _ref_streams(kind, stochastic, **kw):
+    eng = _engine(kind, **kw)
+    reqs = _reqs(3, stochastic)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return _streams(reqs)
+
+
+def _step_until(eng, pred, max_ticks=100):
+    for _ in range(max_ticks):
+        eng.step()
+        if pred():
+            return
+    raise AssertionError("condition not reached")
+
+
+# ----------------------------------------------- mid-decode swap parity
+
+@pytest.mark.parametrize("stochastic", [False, True],
+                         ids=["greedy", "stochastic"])
+@pytest.mark.parametrize("kind", KINDS)
+def test_pause_resume_mid_decode_bitwise(kind, stochastic):
+    """A stream preempted mid-decode and resumed is bitwise the
+    uninterrupted one — and so are the co-resident streams that kept
+    decoding past the stale post-swap slot rows."""
+    ref = _ref_streams(kind, stochastic)
+    eng = _engine(kind)
+    reqs = _reqs(3, stochastic)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: (reqs[0].state == sched.ACTIVE
+                              and len(reqs[0].output) >= 2))
+    eng.pause(0)
+    assert reqs[0].state == sched.SWAPPED and 0 in eng.swapped
+    assert isinstance(eng.swapped[0].state, SwappedState)
+    eng.step()                      # neighbors decode over the freed slot
+    eng.step()
+    eng.resume(0)
+    assert reqs[0].state == sched.RESUMING and 0 in eng.resume_q
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert _streams(reqs) == ref
+    m = eng.metrics()
+    assert m["swap_outs"] >= 1 and m["swap_ins"] >= 1
+    assert m["swap_bytes"] >= 2 * eng.executor.swap_bytes_per_slot
+
+
+def test_swapped_image_matches_spec_budget():
+    """The host image is plain numpy in the staging layout and its byte
+    count is exactly the spec-derived per-slot swap budget the launcher
+    and benchmarks report."""
+    eng = _engine("gdn")
+    req = _reqs(1, False)[0]
+    eng.submit(req)
+    _step_until(eng, lambda: req.state == sched.ACTIVE)
+    eng.pause(0)
+    sw = eng.swapped[0].state
+    leaves = jax.tree.leaves(sw.caches)
+    assert leaves and all(isinstance(x, np.ndarray) for x in leaves)
+    assert all(x.shape[1] == 1 for x in leaves)     # staging layout
+    assert isinstance(sw.token, np.ndarray) and sw.token.shape == (1,)
+    assert set(sw.sampler) == set(eng.executor.sampler)
+    assert sw.nbytes == eng.executor.swap_bytes_per_slot
+    eng.resume(0)
+    eng.run_until_done()
+    assert req.done
+
+
+# ------------------------------------------------- admit-boundary swaps
+
+def _boundary_reqs():
+    return [Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=24),
+            Request(rid=1, prompt=np.arange(1, 14, dtype=np.int32),
+                    max_new_tokens=6, temperature=0.8, top_k=10,
+                    top_p=0.9)]
+
+
+@pytest.mark.parametrize("batching", [None, False],
+                         ids=["batched", "per_prompt"])
+def test_swap_at_admit_boundary(batching):
+    """Pause of a staged-ready request (first token drawn, no slot yet)
+    gathers the staging row/buffer instead of a slot column; the resumed
+    stream is bitwise the uninterrupted one on both staging paths."""
+    eng = _engine("gdn", max_slots=1, prefill_batching=batching)
+    rr = _boundary_reqs()
+    for r in rr:
+        eng.submit(r)
+    eng.run_until_done()
+    ref = _streams(rr)
+
+    eng = _engine("gdn", max_slots=1, prefill_batching=batching)
+    rr = _boundary_reqs()
+    eng.submit(rr[0])
+    eng.step()                                  # the only slot is busy
+    eng.submit(rr[1])
+    _step_until(eng, lambda: rr[1].state == sched.READY)
+    assert len(rr[1].output) == 1 and not eng.free
+    eng.pause(1)
+    assert rr[1].state == sched.SWAPPED and 1 in eng.swapped
+    eng.step()
+    eng.resume(1)
+    eng.run_until_done()
+    assert all(r.done for r in rr)
+    assert _streams(rr) == ref
+    assert eng.metrics()["swap_outs"] == 1
+
+
+@pytest.mark.parametrize("batching", [None, False],
+                         ids=["batched", "per_prompt"])
+def test_pause_mid_prefill_defers_to_admit(batching):
+    """A pause that lands mid-prefill has no admit-advanced sampler row
+    to gather: it is marked pending, the chunk plan finishes, and the
+    swap happens at the admit boundary.  Resuming before that boundary
+    simply cancels the pause (zero swaps)."""
+    long_prompt = np.arange(1, 61, dtype=np.int32)      # 7 chunks + tail
+
+    def pair():
+        return [Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=30),
+                Request(rid=1, prompt=long_prompt, max_new_tokens=5,
+                        temperature=0.8, top_k=10, top_p=0.9)]
+
+    eng = _engine("gdn", max_slots=1, prefill_batching=batching)
+    rr = pair()
+    for r in rr:
+        eng.submit(r)
+    eng.run_until_done()
+    ref = _streams(rr)
+
+    for cancel in (False, True):
+        eng = _engine("gdn", max_slots=1, prefill_batching=batching)
+        rr = pair()
+        eng.submit(rr[0])
+        eng.step()                              # slot busy before staging
+        eng.submit(rr[1])
+        _step_until(eng, lambda: rr[1].state == sched.STAGING)
+        assert eng.pause(1) is rr[1]
+        assert 1 not in eng.swapped             # pending, not yet gathered
+        assert rr[1].state == sched.STAGING
+        if cancel:
+            assert eng.resume(1) is rr[1]       # cancel before the boundary
+        else:
+            _step_until(eng, lambda: rr[1].state == sched.SWAPPED)
+            assert not rr[1].done and len(rr[1].output) == 1
+            eng.resume(1)
+        eng.run_until_done()
+        assert all(r.done for r in rr)
+        assert _streams(rr) == ref
+        assert eng.metrics()["swap_outs"] == (0 if cancel else 1)
+
+
+# -------------------------------------------------- rolling-window wrap
+
+@pytest.mark.parametrize("stochastic", [False, True],
+                         ids=["greedy", "stochastic"])
+def test_swap_inside_window_wrap(stochastic):
+    """Swap of a request whose rolling-window attn cache has wrapped:
+    the gathered image includes the wrapped KV ring and its position
+    meta, so restore lands mid-wrap bitwise."""
+    cfg, _ = _model("swa")
+    W = cfg.window
+    assert W and W < 64, "reduced swa config must have a sub-max_len window"
+    prompt = np.arange(1, W + 9, dtype=np.int32)        # wraps in prefill
+
+    def pair():
+        return [Request(rid=i, prompt=prompt, max_new_tokens=10 + 4 * i,
+                        temperature=0.8 if stochastic and i == 0 else 0.0,
+                        top_k=10 if stochastic and i == 0 else 0,
+                        top_p=0.9 if stochastic and i == 0 else 1.0)
+                for i in range(2)]
+
+    eng = _engine("swa")
+    rr = pair()
+    for r in rr:
+        eng.submit(r)
+    eng.run_until_done()
+    ref = _streams(rr)
+
+    eng = _engine("swa")
+    rr = pair()
+    for r in rr:
+        eng.submit(r)
+    # pause only once decode itself has advanced past the wrap point
+    _step_until(eng, lambda: (rr[0].state == sched.ACTIVE
+                              and len(rr[0].output) >= 4))
+    eng.pause(0)
+    eng.step()
+    eng.resume(0)
+    eng.run_until_done()
+    assert all(r.done for r in rr)
+    assert _streams(rr) == ref
+
+
+# --------------------------------------------- preemption and policies
+
+def test_preempt_explicit_and_policy_victim():
+    """``preempt()`` evicts the lowest-priority active request (ties:
+    most recently activated) with automatic resume; the evicted stream
+    still finishes bitwise intact."""
+    ref = _ref_streams("gdn", False)
+    eng = _engine("gdn")
+    reqs = _reqs(3, False)
+    reqs[0].priority = 1                        # rid 1 is the policy victim
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: len(eng.active) == 2)
+    victim = eng.preempt()
+    assert victim is reqs[1]
+    assert victim.state == sched.RESUMING and 1 in eng.resume_q
+    eng.run_until_done()                        # auto-resume drains it
+    assert all(r.done for r in reqs)
+    assert _streams(reqs) == ref
+
+    eng = _engine("gdn")
+    assert eng.preempt() is None                # nothing resident
+    reqs = _reqs(2, False)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: len(eng.active) == 2)
+    assert eng.preempt(rid=1) is reqs[1]        # explicit victim
+    with pytest.raises(KeyError):
+        eng.preempt(rid=1)                      # no longer active
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+
+
+def test_pressure_policy_evicts_strictly_lower_priority():
+    """pressure: a strictly higher-priority waiter evicts the lowest-
+    priority active request; equal priorities never displace each other
+    (anti-thrash), and both streams finish bitwise intact."""
+    def pair():
+        return [Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=20),
+                Request(rid=1, prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=4, priority=5)]
+
+    eng = _engine("gdn", max_slots=1)
+    rr = pair()
+    for r in rr:
+        eng.submit(r)
+    eng.run_until_done()
+    ref = _streams(rr)
+
+    eng = _engine("gdn", max_slots=1, swap_policy="pressure")
+    rr = pair()
+    eng.submit(rr[0])
+    eng.step()
+    assert rr[0].state == sched.ACTIVE
+    eng.submit(rr[1])                           # strictly outranks rid 0
+    _step_until(eng, lambda: rr[1].state == sched.ACTIVE)
+    assert rr[0].state in (sched.RESUMING, sched.ACTIVE)
+    eng.run_until_done()
+    assert all(r.done for r in rr)
+    assert rr[1].t_done <= rr[0].t_done         # priority jumped the line
+    assert _streams(rr) == ref
+    assert eng.metrics()["swap_outs"] >= 1
+
+    eng = _engine("gdn", max_slots=1, swap_policy="pressure")
+    rr = _reqs(2, False, max_new=4)             # equal priority
+    for r in rr:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in rr)
+    assert eng.metrics()["swap_outs"] == 0      # never displaced
+
+
+def test_idle_policy_lease_and_touch():
+    """idle: an active request whose activity lease expires is swapped
+    out dormant; ``touch`` renews the lease.  Repeated park/reconnect
+    cycles still converge to the dedicated-slot streams."""
+    ref = _ref_streams("gdn", False)
+    # warm up with an effectively-infinite lease: the first ticks pay
+    # multi-second jit compiles, which would blow any realistic lease
+    # mid-ramp and park everything before the scenario even starts
+    eng = _engine("gdn", swap_policy="idle", idle_swap_ms=1e7)
+    warm = _reqs(2, False, max_new=4)
+    for r in warm:
+        eng.submit(r)
+    _step_until(eng, lambda: warm[0].state == sched.ACTIVE)
+    eng.pause(warm[0].rid)                      # compile gather + swap-in
+    eng.resume(warm[0].rid)
+    eng.run_until_done()
+    eng.idle_swap_ms = 50.0                     # now the lease is real
+    reqs = _reqs(3, False)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: len(eng.active) == 2)
+    live = sorted(r.rid for r in eng.active.values())
+    time.sleep(0.07)                            # both leases go stale
+    eng.touch(live[0])                          # ... but one is renewed
+    eng.step()
+    assert live[0] in {r.rid for r in eng.active.values()}
+    parked = [r for r in reqs if r.rid == live[1]][0]
+    assert parked.state == sched.SWAPPED and live[1] in eng.swapped
+    assert live[1] not in eng.resume_q          # dormant, not resuming
+    _drain(eng, reqs)                           # reconnect loop
+    assert _streams(reqs) == ref
+
+
+def test_grant_alternation_no_starvation():
+    """When resumed sessions and staged-ready fresh admits both wait for
+    slots, grants strictly alternate — neither class starves — and every
+    stream matches its dedicated-slot reference."""
+    def mk(n):
+        return [Request(rid=i, prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=6) for i in range(n)]
+
+    eng = _engine("gdn", max_slots=6, staging_depth=2)
+    rr = mk(6)
+    for r in rr:
+        eng.submit(r)
+    eng.run_until_done()
+    ref = _streams(rr)
+
+    eng = _engine("gdn", max_slots=2, staging_depth=2)
+    rr = mk(6)
+    for r in rr[:2]:
+        eng.submit(r)
+    _step_until(eng, lambda: len(eng.active) == 2)
+    eng.preempt()
+    eng.preempt()                               # resume_q holds both
+    assert len(eng.resume_q) == 2 and not eng.active
+    for r in rr[2:]:
+        eng.submit(r)                           # fresh admits contend
+    eng.run_until_done()
+    assert all(r.done for r in rr)
+    assert _streams(rr) == ref
+    m = eng.metrics()
+    assert m["swap_outs"] == 2 and m["swap_ins"] == 2
+
+
+def test_run_until_done_ignores_dormant():
+    """Dormant swapped-out sessions are not pending work: the loop
+    returns with them parked, and a later resume finishes them."""
+    eng = _engine("gdn")
+    reqs = _reqs(2, False, max_new=4)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: reqs[0].state == sched.ACTIVE)
+    eng.pause(0)
+    eng.run_until_done()
+    assert reqs[1].done and not reqs[0].done
+    assert reqs[0].state == sched.SWAPPED
+    assert eng.load == 0                        # dormant ≠ owed work
+    eng.resume(0)
+    assert eng.load == 1
+    eng.run_until_done()
+    assert reqs[0].done
+
+
+# ------------------------------------------------------- router paging
+
+def test_router_pause_resume_and_swap_migration():
+    """The router finds a rid's owning engine for pause/resume/touch,
+    and swap-aware rebalance migrates a resume claim from a slot-full
+    engine to a compatible idle one — restored there bitwise."""
+    cfg, params = _model("gdn")
+
+    def mk(rid, long=False):
+        return Request(rid=rid, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=24 if long else 8,
+                       temperature=0.8, top_k=10, top_p=0.9)
+
+    ref_eng = _engine("gdn", max_slots=1)
+    ref_req = mk(0)
+    ref_eng.submit(ref_req)
+    ref_eng.run_until_done()
+
+    engs = [DecodeEngine(cfg, params, max_slots=1, max_len=64,
+                         decode_block=2, prefill_chunk=8)
+            for _ in range(2)]
+    router = Router(engs, policy="round_robin")
+    a = mk(0)
+    assert router.submit(a) == 0
+    engs[0].step()
+    assert a.state == sched.ACTIVE
+    router.pause(0)                             # via the router front door
+    assert a.state == sched.SWAPPED and 0 in engs[0].swapped
+    hog = mk(10, long=True)
+    engs[0].submit(hog)
+    engs[0].step()                              # hog takes e0's only slot
+    router.resume(0)                            # e0 slot-full -> donor
+    assert list(engs[0].resume_q) == [0]
+    router.step()                               # rebalance_swapped moves it
+    assert 0 in engs[1].swapped or any(
+        r.rid == 0 and r.state == sched.ACTIVE for r in engs[1]._all)
+    router.touch(0)                             # owner lookup post-move
+    done = router.run_until_done()
+    assert {r.rid for r in done} == {0, 10}
+    assert any(r is a for r in engs[1]._all)    # finished on the taker
+    assert list(a.output) == list(ref_req.output)
+    m = router.metrics()
+    assert m["swap_outs"] >= 1 and m["swap_ins"] >= 1
+    assert m["migrated"] >= 1
+
+
+# ------------------------------------------------- swap-aware metrics
+
+def test_ttft_excludes_pre_first_swapped_time():
+    """A request paused out of the queue (client left before prefill)
+    must not book its parked wall time as TTFT."""
+    eng = _engine("gdn")
+    req = _reqs(1, False, max_new=4)[0]
+    eng.submit(req)
+    eng.pause(0)                                # straight from the queue
+    assert eng.swapped[0].state is None         # nothing was resident
+    time.sleep(0.05)
+    eng.resume(0)
+    assert req.state == sched.QUEUED            # re-queued, re-prefills
+    eng.run_until_done()
+    assert req.done
+    assert req.swapped_s >= 0.05
+    wall_ttft = req.t_first - req.t_submit
+    assert wall_ttft >= 0.05
+    assert req.ttft_s < wall_ttft - 0.04        # parked time excluded
+
+
+def test_throughput_excludes_mid_decode_swapped_time():
+    """tokens/s divides by active latency: a request parked mid-decode
+    for 50 ms did not decode slowly for 50 ms.  TTFT already happened,
+    so it is untouched by the swap."""
+    eng = _engine("gdn")
+    req = _reqs(1, False, max_new=8)[0]
+    eng.submit(req)
+    _step_until(eng, lambda: (req.state == sched.ACTIVE
+                              and len(req.output) >= 2))
+    ttft_before = req.ttft_s
+    eng.pause(0)
+    time.sleep(0.05)
+    eng.resume(0)
+    eng.run_until_done()
+    assert req.done
+    assert req.ttft_s == ttft_before
+    assert req.swapped_s >= 0.05
+    assert req.active_latency_s <= req.latency_s - 0.04
+    assert req.tokens_per_s == pytest.approx(
+        len(req.output) / req.active_latency_s)
+    m = eng.metrics()
+    assert m["mean_tokens_per_s"] == pytest.approx(req.tokens_per_s)
+
+
+def test_reset_metrics_completion_marked_window():
+    """The metrics window is marked by completion, not submit order: a
+    request parked across ``reset_metrics`` that finishes after it still
+    counts (the old list-index watermark dropped it)."""
+    eng = _engine("gdn")
+    a, b = _reqs(2, False, max_new=3)[:2]
+    eng.submit(a)
+    eng.run_until_done()
+    assert a.done
+    eng.submit(b)
+    eng.pause(1)                                # parked across the reset
+    eng.reset_metrics()
+    assert eng.metrics()["requests"] == 0       # a is pre-window
+    eng.resume(1)
+    eng.run_until_done()
+    assert b.done
+    m = eng.metrics()
+    assert m["requests"] == 1                   # b survived the reset
+    assert m["tokens"] == len(b.output)
+    assert m["swap_ins"] == 0                   # queue-pause: no image
+
+
+# --------------------------------------------------- lifecycle errors
+
+def test_lifecycle_validation_errors():
+    eng = _engine("gdn")
+    with pytest.raises(KeyError):
+        eng.pause(7)                            # unknown rid
+    with pytest.raises(KeyError):
+        eng.resume(7)
+    with pytest.raises(KeyError):
+        eng.touch(7)
+    with pytest.raises(KeyError):
+        eng.preempt(rid=7)
+    req = _reqs(1, False)[0]
+    eng.submit(req)
+    with pytest.raises(ValueError, match="already live"):
+        eng.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32)))
+    eng.pause(0)
+    with pytest.raises(ValueError, match="already live"):
+        eng.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32)))
+    with pytest.raises(ValueError, match="already swapped"):
+        eng.pause(0)
+    eng.resume(0)
+    eng.run_until_done()
+    assert req.done
+    # a finished rid may recur — sessions reconnect
+    eng.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.run_until_done()
+
+    eng = _engine("gdn")
+    req = _reqs(1, False)[0]
+    eng.submit(req)
+    _step_until(eng, lambda: req.state == sched.ACTIVE)
+    eng.preempt()
+    with pytest.raises(ValueError, match="already resuming"):
+        eng.resume(0)
+    assert eng.pause(0) is req                  # resuming -> dormant
+    assert req.state == sched.SWAPPED and not eng.resume_q
+    eng.resume(0)
+    eng.run_until_done()
+    assert req.done
+
+
+def test_policy_and_cap_validation():
+    cfg, params = _model("gdn")
+    with pytest.raises(ValueError, match="swap_policy"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     swap_policy="lru")
+    with pytest.raises(ValueError, match="idle_swap_ms"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     swap_policy="idle")
+    with pytest.raises(ValueError, match="idle_swap_ms"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     swap_policy="auto", idle_swap_ms=-1.0)
+    with pytest.raises(ValueError, match="max_live_requests"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     max_live_requests=0)
+
+
+def test_max_live_requests_counts_swapped():
+    """The admission cap bounds host memory: swapped-out sessions count
+    as live, and a finished one frees its seat."""
+    eng = _engine("gdn", max_live_requests=2)
+    reqs = _reqs(2, False, max_new=2)
+    for r in reqs:
+        eng.submit(r)
+    eng.pause(0)                                # swapped still counts
+    with pytest.raises(RuntimeError, match="max_live_requests"):
+        eng.submit(Request(rid=9, prompt=np.arange(1, 5, dtype=np.int32)))
+    eng.resume(0)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    eng.submit(Request(rid=9, prompt=np.arange(1, 5, dtype=np.int32),
+                       max_new_tokens=2))       # seats freed by completion
+    eng.run_until_done()
