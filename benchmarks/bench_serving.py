@@ -60,10 +60,19 @@ CPU-interpreter scale; only the trend is the claim):
    ``docs/serving.md`` — virtual devices share the host's FLOPs, which
    is exactly the situation the assertion would be meaningless in).
 
-Each engine first serves a warm-up pass so jit compilation stays out of
-the measurement (``reset_metrics``).  Run with ``--quick`` for the CI
-smoke configuration (one arch, k in {1, 4}, plus the TTFT comparison
-and, when 4+ devices are visible, the mesh-scaling measurement).
+7. **speculative decode** — draft–verify with self-draft (acceptance ≈
+   1, the upper bound) against a ``decode_block = k_draft``
+   non-speculative baseline on the same mixed greedy/stochastic session
+   set.  Streams are asserted bitwise identical and host syncs per
+   emitted token strictly lower; acceptance rate and tokens/s are
+   reported for both engines.
+
+Each engine is built through ``make_engine``, which runs the warm-up
+pass so jit compilation stays out of the measurement
+(``reset_metrics``).  Run with ``--quick`` for the CI smoke
+configuration, with a subcommand name (e.g. ``spec_decode``) to run one
+benchmark, and with ``--json PATH`` to also write every emitted result
+as per-subcommand machine-readable records.
 """
 from __future__ import annotations
 
@@ -86,19 +95,61 @@ def _serve(eng, n_req: int, max_new: int):
     assert all(r.done for r in reqs)
 
 
+_ARCHES = {}
+
+
+def arch_setup(arch: str):
+    """Reduced-CPU config + randomly-initialised params for ``arch``,
+    cached so every subcommand shares one init."""
+    if arch not in _ARCHES:
+        cfg = configs.get_arch(arch).reduced()
+        _ARCHES[arch] = (cfg, lm.init_lm(jax.random.PRNGKey(0), cfg))
+    return _ARCHES[arch]
+
+
+def make_engine(cfg, params, *, warm: int = 0, warm_prompt=None,
+                warm_new: int = 9, warm_paging: bool = False, **kw):
+    """Build a ``DecodeEngine`` and run its warm-up pass so jit
+    compilation stays out of the measurement.
+
+    ``warm`` requests of ``warm_prompt`` (default: 8 tokens) with a
+    ``warm_new`` budget compile every program the measured phase
+    touches — the prompt's chunk plan, the tick buckets, admit and
+    scatter, and on a speculative engine the draft / verify /
+    draft-prefill programs as well.  ``warm_paging`` additionally
+    round-trips one pause/resume so the state-gather and swap-in
+    programs compile too.  Metrics are reset before returning."""
+    eng = DecodeEngine(cfg, params, **kw)
+    prompt = (np.arange(1, 9, dtype=np.int32) if warm_prompt is None
+              else warm_prompt)
+    if warm:
+        for i in range(warm):
+            eng.submit(Request(rid=10_000 + i, prompt=prompt,
+                               max_new_tokens=warm_new))
+        eng.run_until_done()
+    if warm_paging:
+        w = Request(rid=10_000 + warm, prompt=prompt,
+                    max_new_tokens=warm_new)
+        eng.submit(w)
+        eng.step()
+        eng.pause(w.rid)
+        eng.step()      # a speculative engine swaps at the verify boundary
+        eng.resume(w.rid)
+        eng.run_until_done()
+    eng.reset_metrics()
+    return eng
+
+
 def run_block_sweep(quick: bool = False):
     archs = ("qwen3-next-gdn",) if quick else ("qwen3-next-gdn",
                                                "mamba2-1.3b")
     blocks = (1, 4) if quick else (1, 4, 16)
     max_new = 9 if quick else 17         # 1 admit token + k*ticks decode
     for arch in archs:
-        cfg = configs.get_arch(arch).reduced()
-        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        cfg, params = arch_setup(arch)
         for k in blocks:
-            eng = DecodeEngine(cfg, params, max_slots=4, max_len=64,
-                               decode_block=k)
-            _serve(eng, 2, k + 1)        # warm-up: compile prefill + scan
-            eng.reset_metrics()
+            eng = make_engine(cfg, params, warm=2, warm_new=k + 1,
+                              max_slots=4, max_len=64, decode_block=k)
             _serve(eng, 8, max_new)
             m = eng.metrics()
             emit(f"serving/{arch}/k{k}", m["decode_us_per_token"],
@@ -120,15 +171,10 @@ def _ttft_load(cfg, params, *, overlap: bool, n_queued: int,
     median keeps a single noisy CI run from polluting the comparison.
     """
     prompt = np.arange(1, 34, dtype=np.int32)            # 33 tokens
-    eng = DecodeEngine(cfg, params, max_slots=2, max_len=128,
-                       decode_block=4, overlap=overlap, prefill_chunk=8)
-    # warm-up compiles every program the measured phase uses: the chunk
-    # plan for this prompt length, the k tick buckets, admit and scatter —
-    # and runs a queued request through the staging path
-    for i in range(3):
-        eng.submit(Request(rid=10_000 + i, prompt=prompt,
-                           max_new_tokens=9))
-    eng.run_until_done()
+    # 3 warm-up requests also run a queued request through staging
+    eng = make_engine(cfg, params, warm=3, warm_prompt=prompt,
+                      max_slots=2, max_len=128, decode_block=4,
+                      overlap=overlap, prefill_chunk=8)
     means = []
     for trial in range(trials):
         eng.reset_metrics()
@@ -153,8 +199,7 @@ def run_ttft_under_load(quick: bool = False):
     arch = "qwen3-next-gdn"
     n_queued = 2
     trials = 3 if quick else 5
-    cfg = configs.get_arch(arch).reduced()
-    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    cfg, params = arch_setup(arch)
     serialized, s_streams = _ttft_load(cfg, params, overlap=False,
                                        n_queued=n_queued, trials=trials)
     overlapped, o_streams = _ttft_load(cfg, params, overlap=True,
@@ -207,8 +252,7 @@ def run_cold_ttft(quick: bool = False):
     scan(1) + chunk(4) + admit(1) = 4 prefill programs, masked needs
     scan(3) + masked admit = 2."""
     arch = "qwen3-next-gdn"
-    cfg = configs.get_arch(arch).reduced()
-    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    cfg, params = arch_setup(arch)
     trials = 3 if quick else 5
     results = {}
     for mode in ("pow2", "masked"):
@@ -236,10 +280,9 @@ def _tick_throughput(cfg, params, *, data: int, slots_per_shard: int,
     ``data`` (slot count = data * slots_per_shard, all slots busy)."""
     slots = data * slots_per_shard
     mesh = mesh_mod.make_serving_mesh(data, 1) if data > 1 else None
-    eng = DecodeEngine(cfg, params, max_slots=slots, max_len=64,
-                       decode_block=8, mesh=mesh)
+    eng = make_engine(cfg, params, warm=slots, max_slots=slots,
+                      max_len=64, decode_block=8, mesh=mesh)
     best = 0.0
-    _serve(eng, slots, 9)                      # warm-up: compile + admit
     for _ in range(trials):
         eng.reset_metrics()
         _serve(eng, slots, max_new)            # every slot decodes
@@ -262,8 +305,7 @@ def run_mesh_scaling(quick: bool = False):
              f"smoke measurement")
         return
     arch = "qwen3-next-gdn"
-    cfg = configs.get_arch(arch).reduced()
-    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    cfg, params = arch_setup(arch)
     trials = 2 if quick else 3
     max_new = 17 if quick else 33
     tput = {d: _tick_throughput(cfg, params, data=d, slots_per_shard=2,
@@ -295,15 +337,10 @@ def _burst_prefill(cfg, params, *, depth: int, batching: bool,
     last first-token, token streams of the last trial)."""
     import time
     prompt = np.arange(1, 58, dtype=np.int32)          # 57 = 7 chunks + 1
-    eng = DecodeEngine(cfg, params, max_slots=2, max_len=128,
-                       decode_block=4, overlap=True, prefill_chunk=8,
-                       staging_depth=depth, prefill_batching=batching)
-    # warm-up compiles every program the measured phase touches (chunk
-    # plans for this length, decode buckets, admit, scatter)
-    for i in range(depth + 2):
-        eng.submit(Request(rid=10_000 + i, prompt=prompt,
-                           max_new_tokens=9))
-    eng.run_until_done()
+    eng = make_engine(cfg, params, warm=depth + 2, warm_prompt=prompt,
+                      max_slots=2, max_len=128, decode_block=4,
+                      overlap=True, prefill_chunk=8,
+                      staging_depth=depth, prefill_batching=batching)
     disp_max, tputs = 0, []
     for trial in range(trials):
         base = 1000 * (trial + 1)
@@ -344,8 +381,7 @@ def run_burst_prefill(quick: bool = False):
     (burst submission -> last first-token) is asserted >= 1.5x the
     per-prompt baseline, with bitwise-identical token streams."""
     arch = "qwen3-next-gdn"
-    cfg = configs.get_arch(arch).reduced()
-    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    cfg, params = arch_setup(arch)
     trials = 2 if quick else 3
     tput = {}
     for depth in (1, 4, 8):
@@ -397,8 +433,7 @@ def run_oversubscribe(quick: bool = False):
     (``cache_spec`` state + rolling window + sampler row)."""
     from collections import deque
     arch = "qwen3-next-gdn"
-    cfg = configs.get_arch(arch).reduced()
-    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    cfg, params = arch_setup(arch)
     n, slots = (8, 2) if quick else (16, 4)
 
     def sessions():
@@ -419,18 +454,8 @@ def run_oversubscribe(quick: bool = False):
         ded.submit(r)
     ded.run_until_done()
 
-    eng = DecodeEngine(cfg, params, max_slots=slots, max_len=64,
-                       decode_block=2, prefill_chunk=8)
-    # warm-up: compile every program incl. the paging gather + swap-in
-    w = Request(rid=10_000, prompt=np.arange(1, 9, dtype=np.int32),
-                max_new_tokens=9)
-    eng.submit(w)
-    eng.step()
-    eng.pause(w.rid)
-    eng.resume(w.rid)
-    eng.run_until_done()
-    eng.reset_metrics()
-
+    eng = make_engine(cfg, params, warm_paging=True, max_slots=slots,
+                      max_len=64, decode_block=2, prefill_chunk=8)
     live = sessions()
     for r in live:
         eng.submit(r)
@@ -472,21 +497,117 @@ def run_oversubscribe(quick: bool = False):
          f"spec_budget_kib_per_slot={kib_slot:.1f}")
 
 
-def run(quick: bool = False):
-    run_block_sweep(quick=quick)
-    run_ttft_under_load(quick=quick)
-    run_cold_ttft(quick=quick)
-    run_burst_prefill(quick=quick)
-    run_oversubscribe(quick=quick)
-    run_mesh_scaling(quick=quick)
+def run_spec_decode(quick: bool = False):
+    """Speculative decode (self-draft) vs the non-speculative baseline.
+
+    Both engines serve the same mixed greedy/stochastic session set; the
+    baseline fuses ``decode_block = k_draft`` steps per tick (its best
+    host-sync amortisation), the speculative engine drafts ``k_draft``
+    and verifies, emitting up to ``k_draft + 1`` tokens per sync.  Token
+    streams are asserted bitwise identical (the whole point of the
+    shared-key verify) and, because self-draft acceptance is near 1,
+    host syncs per emitted token are asserted *strictly lower* than the
+    baseline's.  Reported: µs/token, tokens/s, acceptance rate,
+    syncs/token for both engines."""
+    arch = "qwen3-next-gdn"
+    cfg, params = arch_setup(arch)
+    k = 4
+    n, max_new = (6, 13) if quick else (12, 25)
+    slots = 2 if quick else 4
+
+    def sessions():
+        return [Request(rid=i,
+                        prompt=np.arange(1, 6 + (i % 5) * 3,
+                                         dtype=np.int32),
+                        max_new_tokens=max_new - (i % 4),
+                        temperature=0.8 if i % 3 == 0 else 0.0,
+                        top_k=10 if i % 3 == 0 else 0,
+                        top_p=0.9 if i % 3 == 0 else 1.0)
+                for i in range(n)]
+
+    res = {}
+    for mode, spec in (("baseline", False), ("speculative", True)):
+        eng = make_engine(cfg, params, warm=2, warm_new=k + 2,
+                          max_slots=slots, max_len=64,
+                          decode_block=k, speculative=spec, k_draft=k)
+        reqs = sessions()
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        m = eng.metrics()
+        res[mode] = ([list(r.output) for r in reqs], m)
+        tps = m["decoded_tokens"] / max(m["decode_s"], 1e-12)
+        emit(f"serving/{arch}/spec_decode_{mode}",
+             m["decode_us_per_token"],
+             f"decode_tokens_per_s={tps:.1f};"
+             f"syncs_per_token={m['syncs_per_token']:.4f};"
+             f"acceptance_rate={m['acceptance_rate']:.3f};"
+             f"drafted={m['drafted_tokens']};"
+             f"accepted={m['accepted_tokens']};k_draft={k};"
+             f"slots={slots};sessions={n};self_draft;reduced_cpu")
+    base_m, spec_m = res["baseline"][1], res["speculative"][1]
+    assert res["speculative"][0] == res["baseline"][0], (
+        "speculative decode must be bitwise: the shared-key verify "
+        "emits exactly the non-speculative stream")
+    assert spec_m["acceptance_rate"] > 0, "self-draft accepted nothing"
+    assert spec_m["syncs_per_token"] < base_m["syncs_per_token"], (
+        f"at acceptance {spec_m['acceptance_rate']:.2f} > 0, host syncs "
+        f"per emitted token must strictly decrease: "
+        f"{spec_m['syncs_per_token']:.4f} >= "
+        f"{base_m['syncs_per_token']:.4f}")
+    emit(f"serving/{arch}/spec_decode_sync_reduction",
+         base_m["syncs_per_token"] / max(spec_m["syncs_per_token"],
+                                         1e-12),
+         f"baseline_syncs_per_token_over_speculative;"
+         f"acceptance={spec_m['acceptance_rate']:.3f};"
+         f"bitwise_identical_streams")
+
+
+SUBCOMMANDS = {
+    "block_sweep": run_block_sweep,
+    "ttft_under_load": run_ttft_under_load,
+    "cold_ttft": run_cold_ttft,
+    "burst_prefill": run_burst_prefill,
+    "oversubscribe": run_oversubscribe,
+    "mesh_scaling": run_mesh_scaling,
+    "spec_decode": run_spec_decode,
+}
+
+
+def run(quick: bool = False, only=None, json_path=None):
+    """Run ``only`` (a subcommand name) or every subcommand; with
+    ``json_path``, write the ``emit`` records grouped per subcommand as
+    machine-readable JSON (the ``BENCH_*.json`` artifact trajectory)."""
+    from benchmarks.common import drain_results
+    names = [only] if only else list(SUBCOMMANDS)
+    drain_results()
+    grouped = {}
+    for name in names:
+        SUBCOMMANDS[name](quick=quick)
+        grouped[name] = drain_results()
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump({"benchmark": "bench_serving",
+                       "quick": bool(quick),
+                       "subcommands": grouped}, f, indent=2)
+        print(f"wrote {sum(len(v) for v in grouped.values())} results "
+              f"to {json_path}")
 
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
+    ap.add_argument("subcommand", nargs="?", default=None,
+                    choices=sorted(SUBCOMMANDS),
+                    help="run one benchmark (default: all)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke config: one arch, k in {1, 4}, plus the "
                          "overlap-on/off TTFT-under-load comparison and "
                          "(4+ devices) the mesh-scaling measurement")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write per-subcommand machine-readable "
+                         "results (name/value/derived records) to PATH")
     args = ap.parse_args()
-    run(quick=args.quick)
+    run(quick=args.quick, only=args.subcommand, json_path=args.json)

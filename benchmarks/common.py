@@ -40,5 +40,21 @@ def timeit(fn, *args, iters=20, warmup=3):
     return times[len(times) // 2]
 
 
+_RESULTS = []
+
+
 def emit(name: str, us_per_call: float, derived: str):
+    """Print one CSV result line and record it for ``drain_results``
+    (the machine-readable --json sink benchmarks build on)."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    _RESULTS.append({"name": name, "value": float(us_per_call),
+                     "derived": derived})
+
+
+def drain_results():
+    """Return (and clear) every result ``emit`` recorded since the last
+    drain — benchmarks call this per subcommand to group their JSON
+    output."""
+    out = list(_RESULTS)
+    _RESULTS.clear()
+    return out

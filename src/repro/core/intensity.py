@@ -130,6 +130,62 @@ def arch_decode_profile(cfg, *, seq: int = 4096,
                    sum(p.token_bytes for p in ps))
 
 
+def mixer_checkpoint_bytes(cfg, kind: str, *, max_len: int = 4096) -> int:
+    """Per-slot speculative-rollback image of one layer — straight from
+    the mixer's declarative ``checkpoint_spec`` (default: the full cache
+    spec, i.e. one extra state copy per slot)."""
+    from repro.models.mixers import get_mixer
+    return get_mixer(kind).checkpoint_spec(cfg, 1, max_len).nbytes
+
+
+def arch_checkpoint_bytes(cfg, *, max_len: int = 4096) -> int:
+    """Whole-model per-slot checkpoint budget, summed over layers."""
+    return sum(mixer_checkpoint_bytes(cfg, k, max_len=max_len)
+               for k in cfg.layer_kinds)
+
+
+def speculative_decode_profile(cfg, *, k_draft: int, acceptance: float,
+                               draft_cfg=None, seq: int = 4096,
+                               persistent: bool = False) -> Profile:
+    """Analytical per-*emitted*-token decode profile under draft–verify
+    speculative decoding.
+
+    A speculative tick runs the target datapath over k_draft + 1
+    positions, the draft over 2 * k_draft + 1 (k_draft proposal steps
+    plus the teacher-forced re-run inside the verify), and one
+    checkpoint-buffer copy (a read + a write of the rollback image, the
+    ``arch_checkpoint_bytes`` cost the cache-spec declaration
+    propagates here).  It emits 1 + acceptance * k_draft tokens, so the
+    per-emitted-token cost is the tick totals divided by that.  Note the
+    target's state traffic per emitted token does NOT shrink (every
+    verify position is a state pass) — what speculative decode amortizes
+    is the *host sync* and per-tick scheduling overhead, by up to
+    k_draft + 1 tokens per sync; the checkpoint makes that cost one
+    state copy instead of a replay pass.
+
+    ``acceptance`` is the per-drafted-token acceptance rate in [0, 1]
+    (the scheduler's ``acceptance_rate`` metric).  ``draft_cfg``
+    defaults to ``cfg`` (self-draft)."""
+    if not 0.0 <= acceptance <= 1.0:
+        raise ValueError(f"acceptance must be in [0, 1], got {acceptance}")
+    if k_draft < 0:
+        raise ValueError(f"k_draft must be >= 0, got {k_draft}")
+    if draft_cfg is None:
+        draft_cfg = cfg
+    target = arch_decode_profile(cfg, seq=seq, persistent=persistent)
+    draft = arch_decode_profile(draft_cfg, seq=seq, persistent=persistent)
+    ckpt = 2.0 * arch_checkpoint_bytes(cfg, max_len=seq)   # read + write
+    emitted = 1.0 + acceptance * k_draft
+    positions = k_draft + 1
+    flops = (target.flops * positions
+             + draft.flops * (2 * k_draft + 1)) / emitted
+    state = (target.state_bytes * positions
+             + draft.state_bytes * (2 * k_draft + 1) + ckpt) / emitted
+    token = (target.token_bytes * positions
+             + draft.token_bytes * (2 * k_draft + 1)) / emitted
+    return Profile(f"{cfg.name}+spec(k={k_draft})", flops, state, token)
+
+
 def paper_table2() -> dict:
     """Reproduce paper Table II (h_v=32, d=128, FP32)."""
     gpu = gdn_profile(persistent=False, fused=False)

@@ -29,6 +29,14 @@ are swapped — fixed-size recurrent state + rolling KV window + sampler
 row, straight from ``cache_spec`` — to host memory and resumed later
 through the same slot-scatter program, bitwise-identically.  See
 docs/serving.md.
+
+``--speculative [--draft-config NAME] [--k-draft K]`` turns on
+draft-verify speculative decode inside the device-resident tick: the
+draft proposes K tokens per slot, one fused verify program scores them
+against the target with the same per-slot sampler keys, and rejected
+positions roll the recurrent state back through a per-slot checkpoint
+buffer — token streams stay bitwise identical to non-speculative
+decode while each accepted run costs one host sync.
 """
 from __future__ import annotations
 
@@ -84,7 +92,11 @@ def build_engines(cfg, params, args, topo: ServingTopology):
             prefill_budget=args.prefill_budget,
             swap_policy=args.swap_policy,
             idle_swap_ms=args.idle_swap_ms,
-            max_live_requests=args.max_live_requests))
+            max_live_requests=args.max_live_requests,
+            speculative=args.speculative,
+            draft_cfg=getattr(args, "_draft_cfg", None),
+            draft_params=getattr(args, "_draft_params", None),
+            k_draft=args.k_draft))
     return engines, slots
 
 
@@ -156,6 +168,24 @@ def main():
                     action="store_false", default=True,
                     help="always run full decode-block ticks (disable the "
                          "budget-aware tick-length cap)")
+    ap.add_argument("--speculative", action="store_true", default=False,
+                    help="draft-verify speculative decode inside the "
+                         "device tick: a draft model proposes --k-draft "
+                         "tokens per slot, one fused verify program "
+                         "scores them with the target and rolls "
+                         "recurrent state back to the last accepted "
+                         "position; token streams stay bitwise identical "
+                         "to non-speculative decode")
+    ap.add_argument("--draft-config", default="self",
+                    help="draft model for --speculative: 'self' (default; "
+                         "the target drafts for itself — acceptance "
+                         "upper bound) or any registered arch name with "
+                         "the same vocab (randomly initialised here; a "
+                         "real deployment loads trained draft weights)")
+    ap.add_argument("--k-draft", type=int, default=4,
+                    help="draft tokens proposed per slot per "
+                         "speculative tick (each tick emits 1..k+1 "
+                         "tokens per slot on one host sync)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="device top-k sampling (0 = disabled)")
@@ -172,6 +202,17 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
+    args._draft_cfg = args._draft_params = None
+    if args.speculative and args.draft_config != "self":
+        dcfg = configs.get_arch(args.draft_config)
+        if args.reduced:
+            dcfg = dcfg.reduced()
+        if dcfg.vocab != cfg.vocab:
+            raise SystemExit(f"--draft-config {args.draft_config}: vocab "
+                             f"{dcfg.vocab} != target vocab {cfg.vocab}")
+        args._draft_cfg = dcfg
+        args._draft_params = lm.init_lm(jax.random.PRNGKey(args.seed + 1),
+                                        dcfg)
     engines, slots = build_engines(cfg, params, args, topo)
     router = Router(engines, policy=args.router_policy)
     eng = engines[0]
@@ -197,6 +238,15 @@ def main():
                  if args.max_live_requests else "")
               + f" — {eng.executor.swap_bytes_per_slot / 2**10:.1f} "
               f"KiB/swap from cache_spec")
+    if args.speculative:
+        ex = eng.executor
+        print(f"speculative: draft={args.draft_config}, "
+              f"k_draft={args.k_draft} — per slot "
+              f"{ex.checkpoint_bytes_per_slot / 2**10:.1f} KiB rollback "
+              f"checkpoint + {ex.draft_bytes_per_slot / 2**10:.1f} KiB "
+              f"draft state "
+              f"({ex.speculative_bytes / 2**20:.2f} MiB total, from "
+              f"checkpoint_spec)")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 17),
@@ -218,6 +268,13 @@ def main():
           f"one host sync per {args.decode_block} tokens, "
           f"{m['stage_dispatches']} staged prefill + "
           f"{m['scatter_dispatches']} scatter dispatches)")
+    if args.speculative:
+        print(f"  speculative: {m['drafted_tokens']} drafted / "
+              f"{m['accepted_tokens']} accepted "
+              f"({m['acceptance_rate']:.2f} acceptance), "
+              f"{m['spec_ticks']} draft-verify ticks, "
+              f"{m['syncs_per_token']:.3f} host syncs/token, "
+              f"{m['draft_prefills']} draft-state rebuilds")
     print(f"  per-request means: ttft {m['mean_ttft_s'] * 1e3:.1f} ms, "
           f"latency {m['mean_latency_s'] * 1e3:.1f} ms, "
           f"{m['mean_tokens_per_s']:.1f} tok/s")

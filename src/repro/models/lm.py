@@ -233,6 +233,23 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int):
     return cache_specs(cfg, batch, max_len).zeros()
 
 
+def checkpoint_specs(cfg: ArchConfig, batch: int, max_len: int) -> CacheSpec:
+    """Declarative spec of the speculative-decode rollback image, stacked
+    like ``cache_specs``.  Built from each mixer's ``checkpoint_spec`` (the
+    registry propagates the one-extra-state-copy-per-slot cost to the
+    engine, the sharding planner and the intensity model without engine
+    edits); for every built-in kind it equals ``cache_specs`` because
+    decode mutates each cache leaf destructively."""
+    groups_spec = []
+    for kinds, reps in build_groups(cfg):
+        per_pos = []
+        for kind in kinds:
+            spec = get_mixer(kind).checkpoint_spec(cfg, batch, max_len)
+            per_pos.append(spec.stack(reps).tree)
+        groups_spec.append(per_pos)
+    return CacheSpec(groups_spec)
+
+
 # ---------------------------------------------------------------- prefill / decode
 
 def _run_cached(params, cfg: ArchConfig, x, caches, mode: str,
@@ -431,3 +448,84 @@ def decode_steps(params, cfg: ArchConfig, tokens, caches, k: int,
     (tokens, caches, sampler), (toks, valid) = jax.lax.scan(
         step, (tokens, caches, sampler), None, length=k)
     return toks, valid, tokens, caches, sampler
+
+
+def verify_steps(params, cfg: ArchConfig, draft_params, draft_cfg,
+                 tokens, drafts, caches, draft_caches, sampler, sample_fn,
+                 dp_axes=None):
+    """Speculative verify: score K drafted tokens per slot against the
+    target model and commit per-slot state only for emitted positions.
+
+    One teacher-forced ``lax.scan`` over K+1 positions feeds the slot's
+    last emitted token followed by its K draft tokens through
+    ``decode_step`` — the *same* arithmetic as non-speculative decode, so
+    every emitted token (and the state it leaves behind) is bitwise what
+    the plain tick would have produced.  (A chunkwise-prefill verify
+    would be one parallel program, but GDN's chunkwise UT transform is a
+    numerically different factorization from the fused decode step, so
+    it could never be bitwise-lossless; ``core.gdn.prefill_sequential``
+    is the existing precedent for scanning the decode step instead.)
+
+    Position j samples the target token t_j with the slot's own key
+    stream (``sample_fn(sampler, logits, active)`` — a masked sampler
+    like ``sampling.sample_where`` that only advances rows where
+    ``active``); the slot keeps accepting while t_j equals the draft
+    token it is about to feed next.  Because draft and target share the
+    (seed, rid)-folded key at every position, coupled rejection sampling
+    collapses to that token-equality check for greedy *and* stochastic
+    slots.  A slot emits m ∈ {1..K+1} tokens (its correction or bonus
+    token last) and zero if it entered the tick done.
+
+    Rollback is the conditional commit: the scan carries a run-ahead
+    cache tree *and* a committed tree, selecting run-ahead into the
+    commit only at active positions, so a slot whose entire draft is
+    rejected ends the tick with bitwise-unchanged committed state — no
+    replay pass.  ``draft_params``/``draft_caches`` run the same inputs
+    through the draft model so its per-slot state tracks the emitted
+    prefix (the committed draft tree is what the next draft pass starts
+    from).
+
+    tokens: (B,) last emitted per slot; drafts: (K, B) int32 (K may be
+    0: a verify-only tick degenerates to one plain decode step).
+    Returns ``(toks (K+1, B), valid (K+1, B), tokens (B,), caches,
+    draft_caches, run, draft_run, sampler)`` where ``caches`` /
+    ``draft_caches`` are the committed trees and ``run`` / ``draft_run``
+    the run-ahead finals (the executor keeps them as the next tick's
+    checkpoint scratch buffers).
+    """
+    k = drafts.shape[0]
+    inp = jnp.concatenate([tokens[None], drafts.astype(jnp.int32)], axis=0)
+    # token position j must match the input fed at j+1 to keep accepting;
+    # the last position has no successor (its emission is the free bonus
+    # token when all K drafts were accepted)
+    nxt = jnp.concatenate([drafts.astype(jnp.int32),
+                           jnp.full_like(tokens[None], -1)], axis=0)
+
+    def commit_where(emit, new, old):
+        def sel(n, o):
+            m = emit.reshape((1, emit.shape[0]) + (1,) * (n.ndim - 2))
+            return jnp.where(m, n, o)
+        return jax.tree.map(sel, new, old)
+
+    def step(carry, xs):
+        run, drun, com, dcom, st, acc, last = carry
+        tin, d = xs
+        active = acc & ~st["done"]
+        logits, run = decode_step(params, cfg, tin, run, dp_axes=dp_axes)
+        _, drun = decode_step(draft_params, draft_cfg, tin, drun,
+                              dp_axes=dp_axes)
+        tok, st = sample_fn(st, logits, active)
+        tok = jnp.where(active, tok.astype(jnp.int32), last)
+        com = commit_where(active, run, com)
+        dcom = commit_where(active, drun, dcom)
+        # stop at the first mismatch — and at EOS/budget exhaustion, even
+        # when the draft guessed the EOS token (the slot is done; feeding
+        # further drafts would emit past its end)
+        acc = active & (tok == d) & ~st["done"]
+        return (run, drun, com, dcom, st, acc, tok), (tok, active)
+
+    init = (caches, draft_caches, caches, draft_caches, sampler,
+            jnp.ones(tokens.shape, bool), tokens)
+    (run, drun, com, dcom, sampler, _, last), (toks, valid) = jax.lax.scan(
+        step, init, (inp, nxt))
+    return toks, valid, last, com, dcom, run, drun, sampler

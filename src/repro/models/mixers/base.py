@@ -180,6 +180,21 @@ class SequenceMixer:
     def init_cache(cls, cfg, batch: int, max_len: int):
         return cls.cache_spec(cfg, batch, max_len).zeros()
 
+    @classmethod
+    def checkpoint_spec(cls, cfg, batch: int, max_len: int) -> CacheSpec:
+        """Per-slot rollback image for speculative decode: the state copy
+        the verify program restores a slot from when its draft suffix is
+        rejected (one extra state copy per slot, the cost ROADMAP calls
+        out).  Default: the full ``cache_spec`` — decode mutates every
+        leaf destructively (a rolling-window KV insert overwrites the
+        wrapped position; length meta alone cannot recover it), so a
+        partial checkpoint would be unsound.  A mixer whose decode
+        provably leaves some leaves untouched may narrow this, but the
+        tree *structure* must stay identical to ``cache_spec`` — the
+        verify program's conditional commit selects between run-ahead and
+        committed trees leaf-by-leaf."""
+        return cls.cache_spec(cfg, batch, max_len)
+
     # ---- analytical decode model (consumed by core.intensity) ----------
 
     @classmethod

@@ -261,6 +261,20 @@ def slot_specs(cfg: ArchConfig, mesh: Mesh, caches_shape, max_slots: int):
     return cache_specs(cfg, mesh, caches_shape, max_slots)
 
 
+def checkpoint_specs(cfg: ArchConfig, mesh: Mesh, ckpt_shape,
+                     max_slots: int):
+    """Speculative-decode checkpoint-buffer shardings: the rollback image
+    is leaf-for-leaf a slot-cache copy (``lm.checkpoint_specs`` defaults
+    every mixer's checkpoint to its full cache spec), so it shards under
+    exactly the slot rules — slot axis on "data", state heads / KV
+    context on "model".  Keeping the placements identical is what lets
+    the verify program's conditional commit (select between run-ahead and
+    committed trees) and the caches↔checkpoint buffer ping-pong stay
+    communication-free: both trees of every pair live on the same
+    devices, same layout."""
+    return cache_specs(cfg, mesh, ckpt_shape, max_slots)
+
+
 def staging_specs(slot_spec_tree):
     """Staging-buffer shardings derived from the slot specs: the staging
     pytree is the same cache layout at slot-count 1, so the slot ("data")

@@ -33,6 +33,22 @@ gains SWAPPED and RESUMING states (``Request.state``), ``swap_policy``
 eviction, and ``max_live_requests`` caps total admission including
 swapped sessions.  See ``docs/serving.md``.
 
+**Speculative decode** (draft–verify with recurrent-state rollback):
+``speculative=True`` runs the whole draft–verify loop inside the
+device-resident tick.  A draft model (``draft_cfg``/``draft_params``;
+default: the target itself, "self-draft") holds its own per-slot caches
+and proposes ``k_draft`` tokens per slot; one fused verify program
+teacher-forces the target over the proposals, samples each position with
+the SAME per-slot key sequence non-speculative decode would use
+(greedy and stochastic streams are therefore bitwise identical to
+``speculative=False``), and rolls every slot's recurrent state back to
+its last accepted position through a per-slot checkpoint buffer declared
+in ``cache_spec``-style specs (``SequenceMixer.checkpoint_spec``).
+Drafts for the next tick are dispatched before the host touches the
+current verify's tokens, so each emitted run of up to ``k_draft + 1``
+tokens still costs one host sync.  ``pause``/``preempt`` during a
+pending draft defer to the verify boundary.  See ``docs/serving.md``.
+
 ``DecodeEngine`` is the backwards-compatible entry point: the PR-2 API
 (``submit`` / ``step`` / ``run_until_done`` / ``metrics``) is unchanged,
 with keyword knobs — ``overlap`` (chunked prefill staged while resident

@@ -216,7 +216,9 @@ class DeviceExecutor:
                  max_len: int, decode_block: int, prefill_chunk: int = 16,
                  mesh: Optional[Mesh] = None, staging_depth: int = 2,
                  plan_mode: str = "masked",
-                 prefill_batching: Optional[bool] = None):
+                 prefill_batching: Optional[bool] = None,
+                 draft_cfg: Optional[ArchConfig] = None, draft_params=None,
+                 k_draft: int = 4):
         if staging_depth < 1:
             raise ValueError(
                 f"staging_depth must be >= 1, got {staging_depth}")
@@ -332,6 +334,91 @@ class DeviceExecutor:
                                 self._sh_tokens)
         self.sampler = self._put(sampling.init_state(max_slots),
                                  self._sh_sampler)
+
+        # ---- speculative decode (draft model slot + rollback buffers) --
+        # The swap image (swap_bytes_per_slot) deliberately excludes ALL
+        # of the buffers below: draft caches are rebuilt from the consumed
+        # token stream at swap-in (draft_prefill_slot) and checkpoints are
+        # scratch that never survives a verify boundary, so a speculative
+        # engine's swapped state stays interchangeable with a
+        # non-speculative engine's.
+        self.speculative = draft_cfg is not None
+        self.k_draft = k_draft
+        if self.speculative:
+            if k_draft < 1:
+                raise ValueError(f"k_draft must be >= 1, got {k_draft}")
+            if draft_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft model must share the target vocab "
+                    f"({draft_cfg.vocab} != {cfg.vocab}) — draft proposals "
+                    f"are token ids the target verifies")
+            from repro.models.mixers import get_mixer
+            unsupported = sorted({k for k in draft_cfg.pattern
+                                  if not get_mixer(k)
+                                  .supports_ragged_prefill})
+            if unsupported:
+                raise ValueError(
+                    f"draft mixer kind(s) {unsupported} do not support "
+                    f"ragged (valid_len-masked) prefill chunks — the "
+                    f"draft state rebuild at slot activation runs one "
+                    f"fixed-shape masked chunk scan")
+            self.draft_cfg = draft_cfg
+            # rollback images, straight from the mixers' declarative
+            # checkpoint specs (default: one full extra state copy per
+            # slot); the registry propagates any narrower per-kind
+            # declaration here, to the sharding planner and to the
+            # intensity model without engine edits
+            self.ckpt_spec = lm.checkpoint_specs(cfg, max_slots, max_len)
+            self.dspec = lm.cache_specs(draft_cfg, max_slots, max_len)
+            self.dckpt_spec = lm.checkpoint_specs(draft_cfg, max_slots,
+                                                  max_len)
+            self.checkpoint_bytes_per_slot = lm.checkpoint_specs(
+                cfg, 1, max_len).nbytes
+            self.draft_bytes_per_slot = (
+                lm.cache_specs(draft_cfg, 1, max_len).nbytes
+                + lm.checkpoint_specs(draft_cfg, 1, max_len).nbytes)
+            self.speculative_bytes = (self.ckpt_spec.nbytes
+                                      + self.dspec.nbytes
+                                      + self.dckpt_spec.nbytes)
+            if mesh is None:
+                self._sh_dparams = self._sh_dcaches = None
+                self._sh_ckpt = self._sh_dckpt = None
+            else:
+                from repro.parallel import sharding as rules
+                self._sh_ckpt = rules.make_shardings(
+                    mesh, rules.checkpoint_specs(
+                        cfg, mesh, self.ckpt_spec.shape_dtype(), max_slots))
+                self._sh_dcaches = rules.make_shardings(
+                    mesh, rules.slot_specs(draft_cfg, mesh,
+                                           self.dspec.shape_dtype(),
+                                           max_slots))
+                self._sh_dckpt = rules.make_shardings(
+                    mesh, rules.checkpoint_specs(
+                        draft_cfg, mesh, self.dckpt_spec.shape_dtype(),
+                        max_slots))
+                self._sh_dparams = (
+                    self._sh_params if draft_params is params else
+                    rules.make_shardings(
+                        mesh, rules.params_specs(draft_cfg, draft_params,
+                                                 False, mesh)))
+            self.draft_params = (
+                self.params if draft_params is params else
+                (draft_params if mesh is None else
+                 jax.device_put(draft_params, self._sh_dparams)))
+            self.dcaches = self._zeros(self.dspec, self._sh_dcaches)
+            self.ckpt = self._zeros(self.ckpt_spec, self._sh_ckpt)
+            self.dckpt = self._zeros(self.dckpt_spec, self._sh_dckpt)
+            # draft prompt-prefill geometry: one fixed (1, n, C) masked
+            # chunk scan covers any consumed-token count <= max_len, with
+            # the SAME chunk size as the target's staged prefill so a
+            # self-draft's rebuilt state hits the same chunk boundaries
+            dlimit = (min(max_len, draft_cfg.window) if draft_cfg.window
+                      else max_len)
+            self._dchunk = min(self.prefill_chunk, dlimit)
+            self._dchunks = -(-max_len // self._dchunk)
+            self._draft_p: Dict[int, object] = {}
+            self._verify_p: Dict[int, object] = {}
+            self._dprefill_p = None
 
         # staging ring (prefill overlap targets); the sampler rows are
         # produced by the fused admit program, not materialized up front
@@ -926,6 +1013,117 @@ class DeviceExecutor:
             self.caches, self.sampler, self.tokens, st, row, tok,
             jnp.int32(slot))
 
+    # ------------------------------------------------- speculative decode
+    def spec_draft(self, k: int):
+        """Propose ``k`` draft tokens per slot: ``lm.decode_steps`` on the
+        draft model over throwaway cache/sampler copies (nothing donated —
+        the committed draft caches and the sampler stay untouched until
+        the verify, so an abandoned draft costs nothing to roll back).
+        The proposals stay on device, feeding the verify program without
+        a host sync; the draw stream is the slot's own (seed, rid)-folded
+        key sequence — the same keys the verify's target sampler will
+        consume, which is what collapses coupled rejection sampling to a
+        token-equality check.  k = 0 (a verify-only tail tick) returns an
+        empty proposal without dispatching."""
+        if k == 0:
+            return self._put(jnp.zeros((0, self.max_slots), jnp.int32),
+                             self._sh_toks2d)
+        prog = self._draft_p.get(k)
+        if prog is None:
+            prog = self._jit(
+                lambda dp, t, dc, s, k=k: lm.decode_steps(
+                    dp, self.draft_cfg, t, dc, k,
+                    sampler=s, sample_fn=sampling.sample)[0],
+                in_sh=(self._sh_dparams, self._sh_tokens,
+                       self._sh_dcaches, self._sh_sampler),
+                out_sh=self._sh_toks2d)
+            self._draft_p[k] = prog
+        return prog(self.draft_params, self.tokens, self.dcaches,
+                    self.sampler)
+
+    def spec_verify(self, k: int, dtoks):
+        """Score a pending k-token draft with ``lm.verify_steps`` and
+        commit each slot's state exactly through its emitted prefix — the
+        single host sync of a speculative tick (up to k+1 tokens per
+        slot).  The checkpoint buffers are donated rollback scratch: the
+        program's run-ahead finals land in them, so ``caches``/``ckpt``
+        (and their draft twins) ping-pong roles every tick and the
+        rollback costs no allocation.  Returns host (k+1, S) toks/valid
+        in exactly ``decode``'s layout."""
+        prog = self._verify_p.get(k)
+        if prog is None:
+            def _verify(p, dp, dtoks, tokens, caches, ckpt, dcaches,
+                        dckpt, samp):
+                del ckpt, dckpt     # donated scratch; outputs alias them
+                toks, valid, last, com, dcom, run, drun, st = \
+                    lm.verify_steps(p, self.cfg, dp, self.draft_cfg,
+                                    tokens, dtoks, caches, dcaches, samp,
+                                    sampling.sample_where)
+                return toks, valid, last, com, run, dcom, drun, st
+
+            prog = self._jit(
+                _verify, donate=(3, 4, 5, 6, 7, 8),
+                in_sh=(self._sh_params, self._sh_dparams, self._sh_toks2d,
+                       self._sh_tokens, self._sh_caches, self._sh_ckpt,
+                       self._sh_dcaches, self._sh_dckpt, self._sh_sampler),
+                out_sh=((self._sh_toks2d, self._sh_toks2d,
+                         self._sh_tokens, self._sh_caches, self._sh_ckpt,
+                         self._sh_dcaches, self._sh_dckpt,
+                         self._sh_sampler)
+                        if self.mesh is not None else None))
+            self._verify_p[k] = prog
+        (toks, valid, self.tokens, self.caches, self.ckpt, self.dcaches,
+         self.dckpt, self.sampler) = prog(
+            self.params, self.draft_params, dtoks, self.tokens,
+            self.caches, self.ckpt, self.dcaches, self.dckpt,
+            self.sampler)
+        return np.asarray(toks), np.asarray(valid)
+
+    def draft_prefill_slot(self, slot: int, tokens_1d):
+        """Rebuild slot ``slot``'s draft-model state from the request's
+        consumed token stream (prompt + all emitted tokens except the
+        last, which is the next decode input) — called at every slot
+        activation: fresh admit and swap-in alike.  This is why the swap
+        image carries no draft state: ONE fixed-shape program (a masked
+        (1, n, C) chunk scan from zero state + a donated slot insert)
+        reconstructs it, with the same chunk size as the target's staged
+        prefill so a self-draft rebuild hits the same chunk boundaries.
+        Streams longer than max_len keep the trailing max_len tokens
+        (draft quality only — the target never sees this state)."""
+        toks = np.asarray(tokens_1d, np.int32).reshape(-1)[-self.max_len:]
+        if toks.size == 0:
+            raise ValueError("draft_prefill_slot needs >= 1 consumed "
+                             "token (prompts are never empty)")
+        C, n = self._dchunk, self._dchunks
+        flat = np.zeros((n * C,), np.int32)
+        flat[:toks.size] = toks
+        vls = np.zeros((n,), np.int32)
+        full, tail = divmod(toks.size, C)
+        vls[:full] = C
+        if tail:
+            vls[full] = tail
+        prog = self._dprefill_p
+        if prog is None:
+            def _dprefill(dp, t, vl, dcaches, slot):
+                c1 = lm.init_caches(self.draft_cfg, 1, self.max_len)
+                c1 = lm.prefill_chunk_scan(dp, self.draft_cfg, c1,
+                                           tokens=t, valid_lens=vl)
+                return jax.tree.map(
+                    lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                        f, o.astype(f.dtype), slot, axis=1),
+                    dcaches, c1)
+
+            prog = self._jit(
+                _dprefill, donate=(3,),
+                in_sh=(self._sh_dparams, self._sh_rep, self._sh_rep,
+                       self._sh_dcaches, self._sh_rep),
+                out_sh=self._sh_dcaches)
+            self._dprefill_p = prog
+        self.dcaches = prog(self.draft_params,
+                            jnp.asarray(flat.reshape(1, n, C)),
+                            jnp.asarray(vls), self.dcaches,
+                            jnp.int32(slot))
+
     # ----------------------------------------------------------- metrics
     def compiled_programs(self) -> Dict[str, int]:
         """Live jitted-program cache sizes per family.
@@ -940,15 +1138,19 @@ class DeviceExecutor:
         prefill = (len(self._scan_p) + len(self._chunk_p)
                    + len(self._admit_p) + len(self._bscan_p)
                    + len(self._badmit_p))
+        spec = (len(self._draft_p) + len(self._verify_p)
+                + (1 if self._dprefill_p is not None else 0)
+                if self.speculative else 0)
         return {
             "decode": len(self._decode_p),
             "prefill_scan": len(self._scan_p) + len(self._bscan_p),
             "prefill_chunk": len(self._chunk_p),
             "prefill_admit": len(self._admit_p) + len(self._badmit_p),
             "prefill": prefill,
+            "speculative": spec,
             # + the slot scatter, + the multi-row scatter once built,
             # + the state-paging gathers once built
-            "total": (len(self._decode_p) + prefill + 1
+            "total": (len(self._decode_p) + prefill + spec + 1
                       + (1 if self._batched_ready else 0)
                       + (1 if self._gather_p is not None else 0)
                       + (1 if self._bgather_p is not None else 0)),

@@ -296,6 +296,16 @@ class Router:
             "resuming": sum(m["resuming"] for m in per),
             "swap_s": sum(m["swap_s"] for m in per),
             "swap_bytes": sum(m["swap_bytes"] for m in per),
+            "speculative": int(all(m["speculative"] for m in per)),
+            "spec_ticks": sum(m["spec_ticks"] for m in per),
+            "drafted_tokens": sum(m["drafted_tokens"] for m in per),
+            "accepted_tokens": sum(m["accepted_tokens"] for m in per),
+            "acceptance_rate": (sum(m["accepted_tokens"] for m in per)
+                                / max(1, sum(m["drafted_tokens"]
+                                             for m in per))),
+            "syncs_per_token": (sum(m["ticks"] for m in per)
+                                / max(1, decoded)),
+            "draft_prefills": sum(m["draft_prefills"] for m in per),
             "mean_ttft_s": wmean("mean_ttft_s"),
             "mean_latency_s": wmean("mean_latency_s"),
             "mean_tokens_per_s": wmean("mean_tokens_per_s"),

@@ -225,6 +225,32 @@ def sample(state: SamplerState, logits):
                  "remaining": remaining, "done": done}
 
 
+def sample_where(state: SamplerState, logits, active):
+    """``sample``, but only rows where ``active`` advance their state.
+
+    The speculative verify scan needs this: a slot that rejected a draft
+    at position j stops emitting for the rest of the tick, and its
+    sampler row must stop advancing at exactly that point — the key
+    splits once per *emitted* token, never per verified position, so the
+    draw stream stays the pure function of (seed, rid, tokens emitted)
+    that non-speculative decode produces.  Rows are computed by the
+    unmodified ``sample`` (identical arithmetic per row: the stochastic
+    pipeline is a per-row vmap and the greedy fast path returns argmax
+    either way), then masked back to the old state where inactive.
+
+    Returns (tokens (S,) int32, new state); inactive rows' tokens are
+    whatever ``sample`` drew from their stale parameters — callers mask
+    them (the verify scan re-emits the slot's last token instead)."""
+    tok, advanced = sample(state, logits)
+    active = jnp.asarray(active)
+
+    def _sel(new, old):
+        mask = active.reshape(active.shape + (1,) * (new.ndim - 1))
+        return jnp.where(mask, new, old)
+
+    return tok, {k: _sel(advanced[k], state[k]) for k in state}
+
+
 # -------------------------------------------- NumPy mirror (host + tests)
 
 def filter_logits_np(logits: np.ndarray, temperature: float, top_k: int,

@@ -198,7 +198,9 @@ class Scheduler:
                  prefill_budget: Optional[int] = None,
                  swap_policy: str = "manual",
                  idle_swap_ms: Optional[float] = None,
-                 max_live_requests: Optional[int] = None):
+                 max_live_requests: Optional[int] = None,
+                 speculative: bool = False, draft_cfg=None,
+                 draft_params=None, k_draft: int = 4):
         if decode_block < 1:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
         if prefill_budget is not None and prefill_budget < 1:
@@ -216,6 +218,10 @@ class Scheduler:
         if max_live_requests is not None and max_live_requests < 1:
             raise ValueError(f"max_live_requests must be >= 1, got "
                              f"{max_live_requests}")
+        if (draft_cfg is not None or draft_params is not None) \
+                and not speculative:
+            raise ValueError("draft_cfg/draft_params given without "
+                             "speculative=True")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -224,11 +230,21 @@ class Scheduler:
         self.decode_block = decode_block
         self.overlap = overlap
         self.budget_ticks = budget_ticks
+        # speculative decode: default draft is the target itself
+        # (self-draft — acceptance 1.0, the upper bound benchmarks use;
+        # real deployments pass a trained smaller draft_cfg/draft_params)
+        self.speculative = speculative
+        self.k_draft = k_draft
+        if speculative and draft_cfg is None:
+            draft_cfg, draft_params = cfg, params
         self.executor = DeviceExecutor(
             cfg, params, max_slots=max_slots, max_len=max_len,
             decode_block=decode_block, prefill_chunk=prefill_chunk,
             mesh=mesh, staging_depth=staging_depth, plan_mode=plan_mode,
-            prefill_batching=prefill_batching)
+            prefill_batching=prefill_batching,
+            draft_cfg=draft_cfg if speculative else None,
+            draft_params=draft_params if speculative else None,
+            k_draft=k_draft)
         # per-tick prefill token budget of the batched packer, in
         # scan-chunk units (an admit dispatch costs one unit).  The
         # default lets every staging row take a full scan + admit per
@@ -261,6 +277,19 @@ class Scheduler:
         self.swapped: Dict[int, _Swapped] = {}
         self.resume_q: Deque[int] = deque()
         self._grant_resume_next = True
+        # speculative tick pipeline: drafts for the NEXT tick are
+        # dispatched at the END of step() (async JAX dispatch overlaps
+        # the draft with host-side emission/admit work — the serving
+        # analogue of the paper's phase pipelining), so a pending
+        # (k, device draft tokens, live-rid snapshot) record spans the
+        # step() boundary; pauses/preempts arriving while it is pending
+        # are deferred to the verify boundary (see pause())
+        self._pending = None
+        self._spec_deferred: List[tuple] = []   # (rid, resume_flag)
+        self.spec_ticks = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.draft_prefills = 0     # draft-state rebuild dispatches
         self.ticks = 0
         self.decode_s = 0.0         # wall time inside decode ticks (+ sync)
         self.decoded_tokens = 0     # tokens emitted by ticks (not admit)
@@ -356,6 +385,13 @@ class Scheduler:
                 f"req {req.rid}: prompt length {T} exceeds max_len "
                 f"{self.max_len} — the window caches would wrap "
                 f"mid-prompt and silently corrupt the context")
+        if self.speculative and req.prompt is None:
+            raise ValueError(
+                f"req {req.rid}: prompt_embeds requests cannot run on a "
+                f"speculative engine — the draft-state rebuild at slot "
+                f"activation (draft_prefill_slot) replays the consumed "
+                f"*token* stream, and embeds have no token ids to "
+                f"replay; submit to a non-speculative engine")
         # the swap store and resume queue are keyed by rid, so a rid must
         # be unique among the engine's LIVE requests (finished rids may
         # recur — sessions reconnect)
@@ -459,6 +495,17 @@ class Scheduler:
           * resuming     -> dropped from the resume queue back to
                             dormant (its image stays on host).
 
+        On a speculative engine, pausing an active request while a draft
+        is in flight (dispatched at the end of the previous tick) defers
+        the swap to the next verify boundary — the mid-prefill deferral
+        pattern applied to decode: between draft and verify the slot's
+        residency is not a self-consistent image (its committed state
+        trails un-verified proposals), so gathering it would capture
+        state a later resume could not bitwise-continue from.  The
+        request stays ACTIVE (and may emit the in-flight tick's verified
+        tokens) until the next ``step`` verifies, then swaps out; a
+        ``resume`` before that boundary just cancels the deferral.
+
         The request stays dormant until ``resume(rid)``; dormant
         requests do not block ``run_until_done``."""
         if rid in self.swapped:
@@ -470,6 +517,10 @@ class Scheduler:
             raise ValueError(f"req {rid} is already swapped out")
         for slot, req in self.active.items():
             if req.rid == rid:
+                if self._pending is not None:
+                    if not any(r == rid for r, _ in self._spec_deferred):
+                        self._spec_deferred.append((rid, False))
+                    return req      # swaps at the verify boundary
                 return self._swap_out_active(slot)
         for st in self._stagings:
             if st.req.rid == rid:
@@ -496,6 +547,11 @@ class Scheduler:
         reached its admit boundary yet is simply cancelled."""
         rec = self.swapped.get(rid)
         if rec is None:
+            for i, (r, _res) in enumerate(self._spec_deferred):
+                if r == rid:        # deferred mid-draft pause: cancel it
+                    del self._spec_deferred[i]
+                    return next(q for q in self.active.values()
+                                if q.rid == rid)
             for st in self._stagings:
                 if st.req.rid == rid and st.pause_pending:
                     st.pause_pending = False
@@ -523,15 +579,29 @@ class Scheduler:
         otherwise the policy victim: lowest priority, ties broken by
         most recent slot activation (the oldest resident is evicted
         last — re-prefill/requeue work already sunk is protected).
-        Returns the evicted request, or None when no slot is occupied."""
+        Returns the evicted request, or None when no slot is occupied.
+        Like ``pause``, a preempt arriving while a speculative draft is
+        in flight is deferred to the verify boundary (with automatic
+        resume preserved)."""
+
+        def _defer(req):
+            if not any(r == req.rid for r, _ in self._spec_deferred):
+                self._spec_deferred.append((req.rid, True))
+            return req
+
         if rid is not None:
             for slot, req in self.active.items():
                 if req.rid == rid:
+                    if self._pending is not None:
+                        return _defer(req)
                     return self._swap_out_active(slot, resume=True)
             raise KeyError(f"req {rid} is not active")
         if not self.active:
             return None
-        return self._swap_out_active(self._victim_slot(), resume=True)
+        slot = self._victim_slot()
+        if self._pending is not None:
+            return _defer(self.active[slot])
+        return self._swap_out_active(slot, resume=True)
 
     def touch(self, rid: int):
         """Refresh request ``rid``'s activity lease — the idle policy
@@ -601,6 +671,7 @@ class Scheduler:
         req.state = ACTIVE
         req._t_active = now
         req.t_last_activity = now
+        self._draft_activate(slot, req)
 
     def _grant_resume(self) -> bool:
         """True when the next freed slot goes to the resume queue rather
@@ -721,12 +792,31 @@ class Scheduler:
         self._free_bufs.append(st.buf)
         self.active[slot] = st.req
         self._activate(st.req)
+        self._draft_activate(slot, st.req)
 
     def _activate(self, req: Request):
         req.state = ACTIVE
         now = time.perf_counter()
         req._t_active = now
         req.t_last_activity = now
+
+    def _draft_activate(self, slot: int, req: Request):
+        """Rebuild the draft model's per-slot state at every slot
+        activation (fresh admit and swap-in alike) by replaying the
+        request's consumed tokens — prompt plus every emitted token
+        except the last, which is the next decode input.  This is what
+        keeps the swap image draft-free: a speculative engine's
+        ``SwappedState`` is byte-identical to a non-speculative one's,
+        and the draft residency is reconstructed in ONE fixed-shape
+        dispatch."""
+        if not self.speculative:
+            return
+        toks = np.asarray(req.prompt, np.int32).reshape(-1)
+        if len(req.output) > 1:
+            toks = np.concatenate(
+                [toks, np.asarray(req.output[:-1], np.int32)])
+        self.executor.draft_prefill_slot(slot, toks)
+        self.draft_prefills += 1
 
     # --------------------------------------------------- batched staging
     def _flush_scatter(self, assigns):
@@ -847,6 +937,7 @@ class Scheduler:
                     assigns.append((slot, st.buf))
                     self.active[slot] = st.req
                     self._activate(st.req)
+                    self._draft_activate(slot, st.req)
                     self._grant_resume_next = True
             if assigns:
                 self._flush_scatter(assigns)
@@ -942,12 +1033,91 @@ class Scheduler:
             k <<= 1
         return min(k, self.decode_block)
 
+    def _spec_k(self) -> int:
+        """Budget-aware draft length: smallest power-of-two bucket (capped
+        at ``k_draft``) covering the largest remaining budget *minus the
+        verify's own guaranteed emission* — a slot with one token left
+        needs no draft at all (k = 0 is a verify-only 1-position tick)."""
+        if not self.budget_ticks:
+            return self.k_draft
+        need = max(r.max_new_tokens - len(r.output)
+                   for r in self.active.values())
+        if need <= 1:
+            return 0
+        k = 1
+        while k < need - 1 and k < self.k_draft:
+            k <<= 1
+        return min(k, self.k_draft)
+
+    def _step_speculative(self):
+        """One speculative engine tick, pipelined across the step
+        boundary: verify the draft dispatched at the END of the previous
+        step (the tick's one host sync), emit, drain pause/preempt
+        requests deferred to this verify boundary, then run the normal
+        policy sweep + admit pipeline and dispatch the next draft.
+        Admits, swap-ins and evictions therefore only ever happen
+        *between* a verify and the next draft — a pending draft never
+        straddles a slot-population change."""
+        if self._pending is not None:
+            k, dtoks, live = self._pending
+            self._pending = None
+            t0 = time.perf_counter()
+            toks, valid = self.executor.spec_verify(k, dtoks)
+            now = time.perf_counter()
+            self.decode_s += now - t0
+            self.ticks += 1
+            self.spec_ticks += 1
+            self.drafted_tokens += k * len(live)
+            for slot, req in list(self.active.items()):
+                emitted = 0
+                for j in range(toks.shape[0]):
+                    if not valid[j, slot]:
+                        break
+                    tok = int(toks[j, slot])
+                    req.output.append(tok)
+                    self.decoded_tokens += 1
+                    emitted += 1
+                    if self._finished(req, tok):
+                        req.done = True
+                        req.state = DONE
+                        req.t_done = now
+                        del self.active[slot]
+                        self.free.append(slot)
+                        break
+                # every emission beyond the first rode on an accepted
+                # draft token (the first is the verify's own sample)
+                self.accepted_tokens += max(emitted - 1, 0)
+            if self._spec_deferred:
+                deferred, self._spec_deferred = self._spec_deferred, []
+                for rid, res in deferred:
+                    slot = next((s for s, r in self.active.items()
+                                 if r.rid == rid), None)
+                    if slot is not None:    # may have finished in verify
+                        self._swap_out_active(slot, resume=res)
+        if self.swap_policy != "manual":
+            self._apply_swap_policy()
+        self._admit()
+        if not self.active:
+            return
+        k = self._spec_k()
+        t0 = time.perf_counter()
+        dtoks = self.executor.spec_draft(k)     # async — no host sync
+        self.decode_s += time.perf_counter() - t0
+        self._pending = (k, dtoks,
+                         [r.rid for r in self.active.values()])
+
     def step(self):
         """One engine tick: advance the admit pipeline (free slots fill as
         in the serialized baseline, plus up to ``staging_depth``
         ahead-of-slot staged prefills when every slot is busy), then one
         fused decode+sample scan, then emit and free — a single host sync
-        for the decode block."""
+        for the decode block.
+
+        Speculative engines run the draft–verify tick instead (see
+        ``_step_speculative``); the non-speculative path below is
+        untouched."""
+        if self.speculative:
+            return self._step_speculative()
         if self.swap_policy != "manual":
             self._apply_swap_policy()
         self._admit()
@@ -1016,6 +1186,10 @@ class Scheduler:
         self.swap_ins = 0
         self.swap_s = 0.0
         self.swap_bytes = 0
+        self.spec_ticks = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.draft_prefills = 0
         self._metrics_seen = {id(r) for r in self._all if r.done}
 
     def metrics(self) -> Dict[str, float]:
@@ -1056,6 +1230,24 @@ class Scheduler:
                                / (self.swap_bytes / 2 ** 20)
                                if self.swap_bytes else 0.0),
             "swap_bytes_per_slot": self.executor.swap_bytes_per_slot,
+            "speculative": int(self.speculative),
+            "k_draft": self.k_draft if self.speculative else 0,
+            "spec_ticks": self.spec_ticks,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "acceptance_rate":
+                self.accepted_tokens / max(1, self.drafted_tokens),
+            "syncs_per_token": self.ticks / max(1, self.decoded_tokens),
+            "draft_prefills": self.draft_prefills,
+            "checkpoint_bytes_per_slot":
+                (self.executor.checkpoint_bytes_per_slot
+                 if self.speculative else 0),
+            "draft_bytes_per_slot":
+                (self.executor.draft_bytes_per_slot
+                 if self.speculative else 0),
+            "speculative_bytes":
+                (self.executor.speculative_bytes
+                 if self.speculative else 0),
             "mesh_data": int(mesh.shape["data"]) if mesh is not None else 1,
             "mesh_model": (int(mesh.shape["model"])
                            if mesh is not None else 1),

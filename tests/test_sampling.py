@@ -65,6 +65,78 @@ def test_top_p_keeps_minimal_prefix():
     assert kept.sum() - kept[-1] < p            # and is minimal
 
 
+def _dev_vs_np(logits, temperature, top_k, top_p):
+    """Device filter + NumPy reference rows for identical knobs."""
+    s = logits.shape[0]
+    dev = np.asarray(sampling.filter_logits(
+        jnp.asarray(logits),
+        jnp.full((s,), temperature, jnp.float32),
+        jnp.full((s,), top_k, jnp.int32),
+        jnp.full((s,), top_p, jnp.float32)))
+    ref = np.stack([sampling.filter_logits_np(row, temperature, top_k,
+                                              top_p) for row in logits])
+    return dev, ref
+
+
+def test_top_k_at_least_vocab_is_identity():
+    """top_k >= vocab (and the 0 sentinel) must keep the full support —
+    the clamp must not drop the last bucket or wrap."""
+    rng = np.random.default_rng(6)
+    logits = _rand_logits(rng)
+    v = logits.shape[-1]
+    for k in (0, v, v + 1, 10 * v):
+        dev, ref = _dev_vs_np(logits, 1.0, k, 1.0)
+        assert np.isfinite(dev).all(), f"top_k={k} dropped entries"
+        np.testing.assert_array_equal(np.isfinite(ref), True)
+        np.testing.assert_allclose(dev, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_top_p_one_is_identity():
+    """top_p=1.0 is the documented 'disabled' sentinel: the cumulative
+    cutoff lands past the last entry and nothing is masked."""
+    rng = np.random.default_rng(7)
+    logits = _rand_logits(rng)
+    dev, ref = _dev_vs_np(logits, 1.0, 0, 1.0)
+    assert np.isfinite(dev).all()
+    np.testing.assert_allclose(dev, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_tied_logits_keep_or_drop_consistently():
+    """Exactly tied logits at the top-k / top-p cutoff: the device sort
+    and the NumPy reference must resolve the tie the same way (stable by
+    index), so the supports agree even at measure-zero inputs."""
+    v = 16
+    base = np.zeros((1, v), np.float32)
+    base[0, :8] = 2.0                   # 8-way tie above a 8-way tie
+    for top_k, top_p in ((4, 1.0), (8, 1.0), (0, 0.5), (4, 0.6)):
+        dev, ref = _dev_vs_np(base, 1.0, top_k, top_p)
+        np.testing.assert_array_equal(np.isfinite(dev),
+                                      np.isfinite(ref),
+                                      err_msg=f"top_k={top_k}, "
+                                              f"top_p={top_p}")
+        keep = np.isfinite(ref)
+        np.testing.assert_allclose(dev[keep], ref[keep], rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_temperature_to_zero_approaches_argmax():
+    """As temperature -> 0 the filtered distribution concentrates on the
+    argmax: at tiny but nonzero temperature the scaled logit gap to the
+    runner-up must exceed any float32 noise, and sampling must pick the
+    argmax."""
+    rng = np.random.default_rng(8)
+    logits = _rand_logits(rng)
+    for t in (1e-2, 1e-3):
+        dev, ref = _dev_vs_np(logits, t, 0, 1.0)
+        np.testing.assert_allclose(dev, ref, rtol=1e-3, atol=1e-2)
+        st = sampling.init_state(5)
+        st["done"] = jnp.zeros((5,), bool)
+        st["remaining"] = jnp.full((5,), 10, jnp.int32)
+        st["temperature"] = jnp.full((5,), t, jnp.float32)
+        tok, _ = sampling.sample(st, jnp.asarray(logits))
+        np.testing.assert_array_equal(np.asarray(tok), logits.argmax(-1))
+
+
 def test_temperature_zero_is_argmax():
     rng = np.random.default_rng(3)
     logits = _rand_logits(rng)

@@ -526,3 +526,84 @@ def test_sharded_swap_subprocess():
                            os.path.abspath(__file__))), timeout=1800)
     assert "SUBPROCESS_PAGING_OK" in r.stdout, \
         r.stdout[-2000:] + r.stderr[-4000:]
+
+
+# ------------------------------ speculative decode under a mesh (subproc)
+
+SUBPROCESS_SPEC_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import numpy as np
+    from repro import configs
+    from repro.models import lm
+    from repro.serving.engine import DecodeEngine, Request
+
+    cfg = configs.get_arch("qwen3-next-gdn").reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+
+    def serve(mesh, speculative, stochastic):
+        eng = DecodeEngine(cfg, params, max_slots=4, max_len=64,
+                           decode_block=4, prefill_chunk=8, mesh=mesh,
+                           speculative=speculative, k_draft=4)
+        rr = [Request(rid=i,
+                      prompt=np.arange(1, 7 + 3 * i, dtype=np.int32),
+                      max_new_tokens=6 + i,
+                      temperature=0.8 if stochastic and i % 2 == 0 else 0.0,
+                      top_k=10 if stochastic and i % 2 == 0 else 0,
+                      top_p=0.9 if stochastic and i % 2 == 0 else 1.0)
+              for i in range(6)]
+        for q in rr:
+            eng.submit(q)
+        eng.run_until_done()
+        assert all(q.done for q in rr)
+        return eng, [list(q.output) for q in rr]
+
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                          devices=jax.devices()[:1])
+    mesh4 = jax.make_mesh((4, 1), ("data", "model"),
+                          devices=jax.devices()[:4])
+
+    # --- 1. bitwise parity: data-sharded speculative streams == the
+    #        1-device non-speculative streams, greedy AND stochastic
+    for stochastic in (False, True):
+        _, base = serve(mesh1, False, stochastic)
+        for mesh in (mesh1, mesh4):
+            eng, out = serve(mesh, True, stochastic)
+            assert out == base, (
+                f"speculative mesh decode must be bitwise "
+                f"(stochastic={stochastic}): {out} vs {base}")
+            assert eng.metrics()["acceptance_rate"] > 0.5
+
+    # --- 2. checkpoint/draft buffers carry the same placements as the
+    #        slot caches (checkpoint_specs == cache_specs rules), so the
+    #        commit/rollback select and the cache<->ckpt ping-pong stay
+    #        communication-free
+    eng, _ = serve(mesh4, True, False)
+    x = eng.executor
+    cache_specs = [l.sharding.spec for l in jax.tree.leaves(x.caches)]
+    ckpt_specs = [l.sharding.spec for l in jax.tree.leaves(x.ckpt)]
+    assert ckpt_specs == cache_specs, list(zip(ckpt_specs,
+                                               cache_specs))[:4]
+    d_specs = [l.sharding.spec for l in jax.tree.leaves(x.dcaches)]
+    dk_specs = [l.sharding.spec for l in jax.tree.leaves(x.dckpt)]
+    assert dk_specs == d_specs
+    slot_ax = [s[1] for s in d_specs if len(s) > 1]
+    assert slot_ax and all(a in ("data", ("data",)) for a in slot_ax), \\
+        slot_ax
+    print("SUBPROCESS_SPEC_OK")
+""")
+
+
+def test_sharded_spec_decode_subprocess():
+    """Speculative decode on a data-sharded mesh: streams bitwise equal
+    to the 1-device non-speculative run, and the rollback checkpoint /
+    draft buffers share the slot caches' placements."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SUBPROCESS_SPEC_TEST],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=1800)
+    assert "SUBPROCESS_SPEC_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-4000:]

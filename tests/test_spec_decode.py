@@ -1,0 +1,389 @@
+"""Speculative decode (draft–verify with recurrent-state rollback):
+the engine must never change a token.
+
+The verify program teacher-forces the target's ``decode_step`` over the
+draft proposals and samples every position with the SAME per-slot
+``(seed, rid)``-folded key sequence non-speculative decode consumes
+(``sampling.sample_where`` advances a slot's key only where the slot is
+still accepting), so acceptance == "the draft guessed what the target
+was going to emit anyway" and the emitted stream is *bitwise* the
+non-speculative one — greedy AND stochastic, regardless of what the
+draft proposes.  Rejected positions roll the recurrent state back
+through the checkpoint buffers declared by
+``SequenceMixer.checkpoint_spec``.  Pinned here:
+
+  * speculative (self-draft) greedy streams == non-speculative greedy
+    streams for all five mixer kinds + gdn_naive;
+  * stochastic parity with a self-draft AND an adversarial draft
+    (random re-initialised weights, near-zero acceptance) — the
+    shared-key coupling makes the draft quality a pure perf knob;
+  * rollback parity at the executor level: a verify tick whose drafts
+    are ALL rejected leaves every slot bitwise identical to one plain
+    decode step, and a done-at-entry slot bitwise unchanged;
+  * pause/preempt during a pending draft defer to the verify boundary
+    (the request stays ACTIVE, swaps on the next step) and a resume
+    before the boundary cancels the pause — streams stay bitwise;
+  * acceptance metrics: self-draft acceptance ≈ 1, host syncs per
+    emitted token < 1; checkpoint byte budgets come from the spec;
+  * constructor/submit validation and the analytical intensity model's
+    speculative profile.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import intensity
+from repro.models import lm
+from repro.models.mixers import get_mixer
+from repro.serving import scheduler as sched
+from repro.serving.engine import DecodeEngine, Request
+
+ARCHS = {
+    "gdn": "qwen3-next-gdn",
+    "ssm": "mamba2-1.3b",
+    "rglru": "recurrentgemma-2b",
+    "attn": "yi-9b",
+    "swa": "h2o-danube-1.8b",
+}
+KINDS = list(ARCHS) + ["gdn_naive"]
+
+_MODELS = {}
+
+
+def _model(kind):
+    if kind not in _MODELS:
+        cfg = configs.get_arch(ARCHS.get(kind, ARCHS["gdn"])).reduced()
+        if kind == "gdn_naive":
+            cfg = cfg.replace(pattern=tuple(
+                "gdn_naive" if k == "gdn" else k for k in cfg.pattern))
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        _MODELS[kind] = (cfg, params)
+    return _MODELS[kind]
+
+
+def _engine(kind, **kw):
+    cfg, params = _model(kind)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("decode_block", 2)
+    kw.setdefault("prefill_chunk", 8)
+    return DecodeEngine(cfg, params, **kw)
+
+
+def _reqs(n, stochastic, max_new=8):
+    return [Request(rid=i, prompt=np.arange(1, 7 + 3 * i, dtype=np.int32),
+                    max_new_tokens=max_new + i,
+                    temperature=0.8 if stochastic and i % 2 == 0 else 0.0,
+                    top_k=10 if stochastic and i % 2 == 0 else 0,
+                    top_p=0.9 if stochastic and i % 2 == 0 else 1.0)
+            for i in range(n)]
+
+
+def _streams(reqs):
+    return [list(r.output) for r in reqs]
+
+
+def _run(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    return _streams(reqs)
+
+
+def _step_until(eng, pred, max_ticks=100):
+    for _ in range(max_ticks):
+        eng.step()
+        if pred():
+            return
+    raise AssertionError("condition not reached")
+
+
+# ------------------------------------------------- bitwise stream parity
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_spec_greedy_bitwise(kind):
+    """Self-draft speculative greedy == non-speculative greedy, per
+    mixer family.  The verify emits the target's own argmax at every
+    position, so the draft can only change how many tokens ride on one
+    host sync — never which tokens."""
+    ref = _run(_engine(kind), _reqs(3, False))
+    spec = _run(_engine(kind, speculative=True, k_draft=4),
+                _reqs(3, False))
+    assert spec == ref
+
+
+@pytest.mark.parametrize("draft", ["self", "adversarial"])
+def test_spec_stochastic_bitwise(draft):
+    """Stochastic parity through the shared key schedule: the verify's
+    position-j sample consumes exactly the key non-speculative decode
+    would, so streams are bitwise even when the draft is a freshly
+    re-initialised model that almost never agrees (acceptance ~ 0, every
+    tick exercises the rollback)."""
+    cfg, params = _model("gdn")
+    kw = {}
+    if draft == "adversarial":
+        kw = dict(draft_cfg=cfg,
+                  draft_params=lm.init_lm(jax.random.PRNGKey(99), cfg))
+    ref = _run(_engine("gdn"), _reqs(3, True))
+    eng = _engine("gdn", speculative=True, k_draft=4, **kw)
+    spec = _run(eng, _reqs(3, True))
+    assert spec == ref
+    m = eng.metrics()
+    if draft == "adversarial":
+        assert m["acceptance_rate"] < 0.5     # rollback actually ran
+    else:
+        assert m["acceptance_rate"] > 0.5
+
+
+def test_spec_parity_across_draft_lengths():
+    """k_draft moves sync cadence only: streams are bitwise identical
+    across draft lengths (including k=1, the degenerate two-position
+    verify)."""
+    ref = _run(_engine("gdn"), _reqs(2, True))
+    for k in (1, 2, 8):
+        assert _run(_engine("gdn", speculative=True, k_draft=k),
+                    _reqs(2, True)) == ref, f"k_draft={k} diverged"
+
+
+# ------------------------------------------------------ rollback parity
+
+def _primed_spec_engines():
+    """Two bitwise-identical speculative engines with both slots active
+    (same submissions, same ticks — identical device state)."""
+    engs = []
+    for _ in range(2):
+        eng = _engine("gdn", speculative=True, k_draft=4)
+        reqs = _reqs(2, False, max_new=20)
+        for r in reqs:
+            eng.submit(r)
+        _step_until(eng, lambda: len(eng.active) == 2)
+        eng.step()                  # one more tick mid-stream
+        engs.append(eng)
+    return engs
+
+
+def test_fully_rejected_tick_equals_one_decode_step():
+    """A verify tick whose drafts are ALL rejected (proposals of -1 can
+    never match a sampled token) must leave every slot — recurrent
+    state, rolling window, sampler row, last token — bitwise identical
+    to one plain non-speculative decode step: the checkpoint rollback
+    restores everything the run-ahead touched."""
+    a, b = _primed_spec_engines()
+    xa, xb = a.executor, b.executor
+    k = 4
+    toks_a, valid_a = xa.decode(1)              # the non-spec reference
+    bad = xb._put(jnp.full((k, xb.max_slots), -1, jnp.int32),
+                  xb._sh_toks2d)
+    toks_b, valid_b = xb.spec_verify(k, bad)
+    # only the verify's own sample survives; every draft is rejected
+    assert valid_b[0].all() and not valid_b[1:].any()
+    np.testing.assert_array_equal(toks_b[0], toks_a[0])
+    for slot in range(xa.max_slots):
+        sa, sb = xa.gather_slot(slot), xb.gather_slot(slot)
+        assert sa.sampler.keys() == sb.sampler.keys()
+        for kk in sa.sampler:
+            np.testing.assert_array_equal(sa.sampler[kk], sb.sampler[kk],
+                                          err_msg=f"sampler[{kk}]")
+        np.testing.assert_array_equal(sa.token, sb.token)
+        la, lb = jax.tree.leaves(sa.caches), jax.tree.leaves(sb.caches)
+        assert len(la) == len(lb)
+        for i, (x, y) in enumerate(zip(la, lb)):
+            np.testing.assert_array_equal(x, y, err_msg=f"cache leaf {i}")
+
+
+def test_done_slot_is_bitwise_unchanged_by_verify():
+    """A slot whose sampler is done at verify entry emits nothing and
+    commits nothing: its full residency is bitwise unchanged by the
+    tick (non-speculative decode would still have churned its cache —
+    the rollback makes 'no tokens' mean 'no state change')."""
+    _, b = _primed_spec_engines()
+    xb = b.executor
+    xb.sampler = {kk: (v.at[1].set(True) if kk == "done" else v)
+                  for kk, v in xb.sampler.items()}
+    before = xb.gather_slot(1)
+    bad = xb._put(jnp.full((4, xb.max_slots), -1, jnp.int32),
+                  xb._sh_toks2d)
+    toks, valid = xb.spec_verify(4, bad)
+    assert not valid[:, 1].any()                # emitted nothing
+    after = xb.gather_slot(1)
+    np.testing.assert_array_equal(before.token, after.token)
+    for kk in before.sampler:
+        np.testing.assert_array_equal(before.sampler[kk],
+                                      after.sampler[kk],
+                                      err_msg=f"sampler[{kk}]")
+    for i, (x, y) in enumerate(zip(jax.tree.leaves(before.caches),
+                                   jax.tree.leaves(after.caches))):
+        np.testing.assert_array_equal(x, y, err_msg=f"cache leaf {i}")
+
+
+# ------------------------------------------- pause at the verify boundary
+
+def test_pause_during_pending_draft_defers_to_verify():
+    """pause() while a draft is in flight keeps the request ACTIVE (its
+    residency between draft and verify is not a self-consistent image),
+    swaps it at the next verify boundary, and the resumed stream is
+    bitwise the never-paused one."""
+    ref = _run(_engine("gdn", speculative=True, k_draft=4),
+               _reqs(2, True, max_new=10))
+    eng = _engine("gdn", speculative=True, k_draft=4)
+    reqs = _reqs(2, True, max_new=10)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: (len(eng.active) == 2
+                              and eng._pending is not None))
+    assert eng.pause(0) is reqs[0]
+    assert reqs[0].state == sched.ACTIVE        # deferred, not swapped
+    assert 0 not in eng.swapped
+    eng.step()                                  # verify, then swap out
+    assert reqs[0].state in (sched.SWAPPED, sched.DONE)
+    if reqs[0].state == sched.SWAPPED:
+        eng.step()                              # neighbor keeps decoding
+        eng.resume(0)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert _streams(reqs) == ref
+
+
+def test_resume_before_boundary_cancels_deferred_pause():
+    ref = _run(_engine("gdn", speculative=True, k_draft=4),
+               _reqs(2, False, max_new=10))
+    eng = _engine("gdn", speculative=True, k_draft=4)
+    reqs = _reqs(2, False, max_new=10)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: (len(eng.active) == 2
+                              and eng._pending is not None))
+    eng.pause(0)
+    assert eng.resume(0) is reqs[0]             # cancel before the verify
+    assert reqs[0].state == sched.ACTIVE
+    eng.run_until_done()
+    assert _streams(reqs) == ref
+    assert eng.metrics()["swap_outs"] == 0
+
+
+def test_preempt_during_pending_draft_defers():
+    """preempt() mid-draft defers exactly like pause, but re-queues the
+    victim for automatic resume."""
+    ref = _run(_engine("gdn", speculative=True, k_draft=4),
+               _reqs(2, False, max_new=10))
+    eng = _engine("gdn", speculative=True, k_draft=4)
+    reqs = _reqs(2, False, max_new=10)
+    reqs[0].priority = 1
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: (len(eng.active) == 2
+                              and eng._pending is not None))
+    assert eng.preempt() is reqs[1]             # lowest priority
+    assert reqs[1].state == sched.ACTIVE        # deferred
+    eng.run_until_done()                        # swaps, auto-resumes
+    assert all(r.done for r in reqs)
+    assert _streams(reqs) == ref
+    assert eng.metrics()["swap_outs"] >= 1
+
+
+def test_swap_image_is_draft_free():
+    """The swap image of a speculative engine is byte-identical in
+    layout and budget to a non-speculative one's — the draft caches and
+    checkpoints are rebuilt at swap-in, never shipped to host."""
+    spec = _engine("gdn", speculative=True, k_draft=4)
+    base = _engine("gdn")
+    assert (spec.executor.swap_bytes_per_slot
+            == base.executor.swap_bytes_per_slot)
+    req = _reqs(1, False)[0]
+    spec.submit(req)
+    _step_until(spec, lambda: req.state == sched.ACTIVE)
+    prefills0 = spec.draft_prefills
+    spec.pause(0)
+    spec.step()                                 # boundary swap executes
+    assert req.state == sched.SWAPPED
+    assert spec.swapped[0].state.nbytes == base.executor.swap_bytes_per_slot
+    spec.resume(0)
+    spec.run_until_done()
+    assert req.done
+    assert spec.draft_prefills > prefills0      # rebuilt at swap-in
+
+
+# -------------------------------------------------- metrics and budgets
+
+def test_self_draft_acceptance_and_sync_amortisation():
+    eng = _engine("gdn", speculative=True, k_draft=4)
+    _run(eng, _reqs(3, False, max_new=12))
+    m = eng.metrics()
+    assert m["speculative"] == 1 and m["k_draft"] == 4
+    assert m["spec_ticks"] == m["ticks"] > 0
+    assert m["accepted_tokens"] <= m["drafted_tokens"]
+    assert m["acceptance_rate"] > 0.6           # self-draft, same chunks
+    assert m["syncs_per_token"] < 1.0 / 2       # > 2 tokens per sync
+    assert m["draft_prefills"] == 3             # one per admit
+    assert (m["checkpoint_bytes_per_slot"] > 0
+            and m["draft_bytes_per_slot"] > 0
+            and m["speculative_bytes"] > 0)
+    progs = eng.executor.compiled_programs()
+    assert progs["speculative"] >= 3            # draft + verify + rebuild
+
+
+def test_nonspec_engine_reports_zero_spec_metrics():
+    eng = _engine("gdn")
+    _run(eng, _reqs(1, False, max_new=4))
+    m = eng.metrics()
+    assert m["speculative"] == 0 and m["k_draft"] == 0
+    assert m["spec_ticks"] == m["drafted_tokens"] == 0
+    assert m["speculative_bytes"] == 0
+    assert eng.executor.compiled_programs()["speculative"] == 0
+
+
+def test_checkpoint_spec_and_intensity_model():
+    """checkpoint_spec defaults to the full cache_spec (decode mutates
+    every leaf destructively), the byte helpers sum it over layers, and
+    the speculative profile amortises host-side cost by emitted tokens
+    while keeping state traffic per token honest."""
+    cfg, _ = _model("gdn")
+    for kind in dict.fromkeys(cfg.layer_kinds):
+        ck = get_mixer(kind).checkpoint_spec(cfg, 1, 64)
+        cs = get_mixer(kind).cache_spec(cfg, 1, 64)
+        assert ck.nbytes == cs.nbytes
+        assert intensity.mixer_checkpoint_bytes(cfg, kind, max_len=64) \
+            == cs.nbytes
+    assert intensity.arch_checkpoint_bytes(cfg, max_len=64) == sum(
+        intensity.mixer_checkpoint_bytes(cfg, k, max_len=64)
+        for k in cfg.layer_kinds)
+    p0 = intensity.speculative_decode_profile(cfg, k_draft=4,
+                                              acceptance=0.0)
+    p1 = intensity.speculative_decode_profile(cfg, k_draft=4,
+                                              acceptance=1.0)
+    # same tick work, 5x the emissions: per-token cost falls 5x
+    assert p0.flops == pytest.approx(5 * p1.flops)
+    assert p1.name.endswith("+spec(k=4)")
+    with pytest.raises(ValueError, match="acceptance"):
+        intensity.speculative_decode_profile(cfg, k_draft=4,
+                                             acceptance=1.5)
+    with pytest.raises(ValueError, match="k_draft"):
+        intensity.speculative_decode_profile(cfg, k_draft=-1,
+                                             acceptance=0.5)
+
+
+# ----------------------------------------------------------- validation
+
+def test_spec_validation_errors():
+    cfg, params = _model("gdn")
+    with pytest.raises(ValueError, match="speculative"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     draft_cfg=cfg, draft_params=params)
+    with pytest.raises(ValueError, match="k_draft"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     speculative=True, k_draft=0)
+    other = configs.get_arch("mamba2-1.3b").reduced()
+    if other.vocab != cfg.vocab:
+        with pytest.raises(ValueError, match="vocab"):
+            DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                         speculative=True, draft_cfg=other,
+                         draft_params=lm.init_lm(jax.random.PRNGKey(1),
+                                                 other))
+    eng = _engine("gdn", speculative=True, k_draft=2)
+    emb = np.zeros((4, cfg.d_model), np.float32)
+    with pytest.raises(ValueError, match="prompt_embeds"):
+        eng.submit(Request(rid=0, prompt=None, prompt_embeds=emb,
+                           max_new_tokens=2))
