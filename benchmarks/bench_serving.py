@@ -43,10 +43,15 @@ CPU-interpreter scale; only the trend is the claim):
    token streams.
 
 5. **slot oversubscription** — N interleaved sessions with idle gaps
-   rotate through S << N slots via host-swapped state (pause/resume).
-   Token streams are asserted bitwise identical to a dedicated-slot
-   engine (one slot per session); swap µs/MiB is reported against the
-   spec-derived per-slot byte budget.
+   rotate through S << N slots via host-swapped state (pause/resume),
+   once with synchronous paging and once with ``async_paging=True``.
+   Token streams are asserted bitwise identical across both modes AND a
+   dedicated-slot engine (one slot per session), per mixer kind with
+   mixed greedy/stochastic sessions; swap µs/MiB is reported against
+   the spec-derived per-slot byte budget, plus the swap-stall breakdown
+   (gather / put / scatter µs per swap and the harvest overlap ratio).
+   Async paging is asserted to spend measurably less blocked-host time
+   per swap than the synchronous baseline, with overlap ratio > 0.
 
 6. **mesh scaling** — (multi-device backends only, e.g.
    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU) the
@@ -418,45 +423,26 @@ def run_burst_prefill(quick: bool = False):
         f"{speedup:.2f}x < 1.5x")
 
 
-def run_oversubscribe(quick: bool = False):
-    """Slot oversubscription: N interleaved sessions with idle gaps
-    rotate through S << N device slots via host-swapped state.
+_MIXERS = {
+    "gdn": "qwen3-next-gdn",
+    "ssm": "mamba2-1.3b",
+    "rglru": "recurrentgemma-2b",
+    "attn": "yi-9b",
+    "swa": "h2o-danube-1.8b",
+}
 
-    Every tick the oversubscribed engine reconnects the oldest parked
-    session (a "client came back") and pauses the most-recently-activated
-    resident (its "client went idle"), so sessions take repeated swap
-    round-trips for as long as the workload runs.  Token streams are asserted bitwise identical to a
-    dedicated-slot engine with one slot per session — paging moves
-    placement and timing, never a token (cross-slot-count parity is
-    pinned by tests/test_batched_prefill.py).  Reported: swap traffic
-    and µs/MiB against the spec-derived per-slot byte budget
-    (``cache_spec`` state + rolling window + sampler row)."""
+
+def _oversubscribe_rotate(cfg, params, *, n: int, slots: int,
+                          make_sessions, **kw):
+    """One oversubscribed rotation: every tick the engine reconnects the
+    oldest parked session (a "client came back") and pauses the
+    most-recently-activated resident (its "client went idle"), so
+    sessions take repeated swap round-trips for as long as the workload
+    runs.  Returns (token streams, metrics)."""
     from collections import deque
-    arch = "qwen3-next-gdn"
-    cfg, params = arch_setup(arch)
-    n, slots = (8, 2) if quick else (16, 4)
-
-    def sessions():
-        return [Request(rid=i,
-                        prompt=np.arange(1, 6 + (i % 5) * 3,
-                                         dtype=np.int32),
-                        max_new_tokens=10 + (i % 4),
-                        temperature=0.8 if i % 3 == 0 else 0.0,
-                        top_k=10 if i % 3 == 0 else 0,
-                        top_p=0.9 if i % 3 == 0 else 1.0)
-                for i in range(n)]
-
-    # dedicated-slot reference: every session keeps its own slot
-    ded = DecodeEngine(cfg, params, max_slots=n, max_len=64,
-                       decode_block=2, prefill_chunk=8)
-    ref = sessions()
-    for r in ref:
-        ded.submit(r)
-    ded.run_until_done()
-
     eng = make_engine(cfg, params, warm_paging=True, max_slots=slots,
-                      max_len=64, decode_block=2, prefill_chunk=8)
-    live = sessions()
+                      max_len=64, decode_block=2, prefill_chunk=8, **kw)
+    live = make_sessions()
     for r in live:
         eng.submit(r)
     parked = deque()
@@ -477,24 +463,114 @@ def run_oversubscribe(quick: bool = False):
         eng.resume(parked.popleft())
     eng.run_until_done()
     assert all(r.done for r in live)
-    assert [list(r.output) for r in live] == \
-        [list(r.output) for r in ref], (
-        "oversubscription must be bitwise: paging moves state, never a "
-        "token")
+    return [list(r.output) for r in live], eng.metrics()
 
-    m = eng.metrics()
-    assert m["swap_outs"] >= n // 2, \
-        f"rotation produced too little swap traffic: {m['swap_outs']}"
-    assert m["swap_ins"] == m["swap_outs"], "a parked session never resumed"
-    kib_slot = m["swap_bytes_per_slot"] / 2 ** 10
-    emit(f"serving/{arch}/oversubscribe_swap_us_per_mb",
-         m["swap_us_per_mb"],
-         f"slots={slots};sessions={n};swap_outs={m['swap_outs']};"
-         f"swap_mib={m['swap_bytes'] / 2 ** 20:.2f};"
-         f"kib_per_swap={kib_slot:.1f};bitwise_vs_dedicated;reduced_cpu")
-    emit(f"serving/{arch}/oversubscribe_swap_s", m["swap_s"],
-         f"total_swap_wall_s;swaps={m['swap_outs'] + m['swap_ins']};"
-         f"spec_budget_kib_per_slot={kib_slot:.1f}")
+
+def run_oversubscribe(quick: bool = False):
+    """Slot oversubscription: N interleaved sessions with idle gaps
+    rotate through S << N device slots via host-swapped state — once
+    synchronous, once with ``async_paging=True``.
+
+    Token streams are asserted bitwise identical across sync paging,
+    async paging AND a dedicated-slot engine with one slot per session —
+    paging (and its overlap) moves placement and timing, never a token —
+    for each mixer kind (all five when full, a recurrent + a KV-window
+    kind under ``--quick``; per-kind async parity is also pinned by
+    tests/test_state_paging.py), with mixed greedy/stochastic sessions.
+    Reported: swap traffic and µs/MiB against the spec-derived per-slot
+    byte budget (``cache_spec`` state + rolling window + sampler row),
+    plus the swap-stall breakdown — gather / put / scatter µs per swap,
+    blocked-host stall vs non-blocking dispatch time, and the harvest
+    overlap ratio.  Asserted: async overlap ratio > 0 (sync is 0 by
+    construction: every gather is force-harvested at dispatch) and async
+    blocked-host stall per swap strictly below the synchronous
+    baseline's."""
+    kinds = ("gdn", "attn") if quick else tuple(_MIXERS)
+    n, slots = (8, 2) if quick else (16, 4)
+
+    def make_sessions():
+        return [Request(rid=i,
+                        prompt=np.arange(1, 6 + (i % 5) * 3,
+                                         dtype=np.int32),
+                        max_new_tokens=10 + (i % 4),
+                        temperature=0.8 if i % 3 == 0 else 0.0,
+                        top_k=10 if i % 3 == 0 else 0,
+                        top_p=0.9 if i % 3 == 0 else 1.0)
+                for i in range(n)]
+
+    for kind in kinds:
+        arch = _MIXERS[kind]
+        cfg, params = arch_setup(arch)
+
+        # dedicated-slot reference: every session keeps its own slot
+        ded = DecodeEngine(cfg, params, max_slots=n, max_len=64,
+                           decode_block=2, prefill_chunk=8)
+        ref = make_sessions()
+        for r in ref:
+            ded.submit(r)
+        ded.run_until_done()
+        ref_streams = [list(r.output) for r in ref]
+
+        res = {}
+        for mode, apg in (("sync", False), ("async", True)):
+            streams, m = _oversubscribe_rotate(
+                cfg, params, n=n, slots=slots,
+                make_sessions=make_sessions, async_paging=apg)
+            assert streams == ref_streams, (
+                f"{kind}/{mode}: oversubscription must be bitwise: "
+                f"paging moves state, never a token")
+            assert m["swap_outs"] >= n // 2, (
+                f"{kind}/{mode}: rotation produced too little swap "
+                f"traffic: {m['swap_outs']}")
+            assert m["swap_ins"] == m["swap_outs"], \
+                f"{kind}/{mode}: a parked session never resumed"
+            res[mode] = m
+
+            swaps = m["swap_outs"] + m["swap_ins"]
+            stall_us = m["swap_stall_s"] / swaps * 1e6
+            kib_slot = m["swap_bytes_per_slot"] / 2 ** 10
+            emit(f"serving/{arch}/oversubscribe_swap_us_per_mb_{mode}",
+                 m["swap_us_per_mb"],
+                 f"slots={slots};sessions={n};swap_outs={m['swap_outs']};"
+                 f"swap_mib={m['swap_bytes'] / 2 ** 20:.2f};"
+                 f"kib_per_swap={kib_slot:.1f};bitwise_vs_dedicated;"
+                 f"reduced_cpu")
+            emit(f"serving/{arch}/oversubscribe_swap_stall_us_{mode}",
+                 stall_us,
+                 f"blocked_host_us_per_swap;swaps={swaps};"
+                 f"dispatch_s={m['swap_dispatch_s']:.4f};"
+                 f"stall_s={m['swap_stall_s']:.4f};"
+                 f"gather_us_per_swap="
+                 f"{m['swap_gather_s'] / swaps * 1e6:.1f};"
+                 f"put_us_per_swap={m['swap_put_s'] / swaps * 1e6:.1f};"
+                 f"scatter_us_per_swap="
+                 f"{m['swap_scatter_s'] / swaps * 1e6:.1f};"
+                 f"overlap_ratio={m['swap_overlap_ratio']:.3f};"
+                 f"harvests_overlapped={m['swap_harvests_overlapped']};"
+                 f"harvests_forced={m['swap_harvests_forced']};"
+                 f"prefetch_hits={m['swap_prefetch_hits']}")
+
+        sync_m, async_m = res["sync"], res["async"]
+        assert sync_m["swap_overlap_ratio"] == 0.0, \
+            f"{kind}: sync paging cannot overlap a harvest"
+        assert async_m["swap_overlap_ratio"] > 0.0, (
+            f"{kind}: async paging overlapped no harvest with the tick "
+            f"({async_m['swap_harvests_forced']} forced)")
+        sync_stall = sync_m["swap_stall_s"] / (sync_m["swap_outs"]
+                                               + sync_m["swap_ins"])
+        async_stall = async_m["swap_stall_s"] / (async_m["swap_outs"]
+                                                 + async_m["swap_ins"])
+        assert async_stall < sync_stall, (
+            f"{kind}: async paging must lower blocked-host stall per "
+            f"swap: {async_stall * 1e6:.1f} us >= "
+            f"{sync_stall * 1e6:.1f} us")
+        emit(f"serving/{arch}/oversubscribe_async_stall_reduction",
+             sync_stall / max(async_stall, 1e-12),
+             f"sync_over_async_blocked_host_us_per_swap;"
+             f"sync_us={sync_stall * 1e6:.1f};"
+             f"async_us={async_stall * 1e6:.1f};"
+             f"overlap_ratio={async_m['swap_overlap_ratio']:.3f};"
+             f"bitwise_identical_streams")
 
 
 def run_spec_decode(quick: bool = False):

@@ -93,6 +93,10 @@ def build_engines(cfg, params, args, topo: ServingTopology):
             swap_policy=args.swap_policy,
             idle_swap_ms=args.idle_swap_ms,
             max_live_requests=args.max_live_requests,
+            async_paging=args.async_paging,
+            gather_ring=args.gather_ring,
+            host_swap_bytes=args.host_swap_bytes,
+            swap_spool_dir=args.swap_spool_dir,
             speculative=args.speculative,
             draft_cfg=getattr(args, "_draft_cfg", None),
             draft_params=getattr(args, "_draft_params", None),
@@ -156,6 +160,29 @@ def main():
                          "staging + active + swapped) per engine — "
                          "oversubscription bounds host memory, not just "
                          "device slots (default: unlimited)")
+    ap.add_argument("--async-paging", action="store_true", default=False,
+                    help="overlap swap transfers with the decode tick: "
+                         "swap-outs drain D2H in the background through "
+                         "a ring of gather buffers (harvested at tick "
+                         "boundaries) and predictable resume grants "
+                         "prestage their H2D put one tick ahead — "
+                         "streams stay bitwise-identical to synchronous "
+                         "paging")
+    ap.add_argument("--gather-ring", type=int, default=2,
+                    help="device-side gather buffers for async paging: "
+                         "how many swap-out drains may be outstanding "
+                         "before a dispatch force-harvests the oldest "
+                         "(default 2 — double buffering)")
+    ap.add_argument("--host-swap-bytes", type=int, default=None,
+                    help="spill watermark: when in-memory swapped images "
+                         "exceed this many bytes, the coldest dormant "
+                         "one spills to --swap-spool-dir (default: no "
+                         "spilling unless a spool dir is set, then 0 — "
+                         "spill every dormant image)")
+    ap.add_argument("--swap-spool-dir", default=None,
+                    help="directory for spilled .npz swap images "
+                         "(spill-to-disk tier for truly cold sessions; "
+                         "images reload transparently on resume)")
     ap.add_argument("--engines", type=int, default=1,
                     help="number of per-mesh engines behind the router")
     ap.add_argument("--router-policy", default="least_loaded",
@@ -230,12 +257,18 @@ def main():
           f"chunks of {eng.prefill_chunk} ({eng.plan_mode} plans, "
           f"{'batched' if eng.prefill_batching else 'per-prompt'} "
           f"staging)")
-    if args.swap_policy != "manual" or args.max_live_requests:
+    if (args.swap_policy != "manual" or args.max_live_requests
+            or args.async_paging or args.swap_spool_dir):
         print(f"paging: swap_policy={args.swap_policy}"
               + (f", idle lease {args.idle_swap_ms:.0f} ms"
                  if args.idle_swap_ms is not None else "")
               + (f", max {args.max_live_requests} live sessions/engine"
                  if args.max_live_requests else "")
+              + (f", async (gather ring {args.gather_ring})"
+                 if args.async_paging else ", synchronous")
+              + (f", spool {args.swap_spool_dir} @ "
+                 f"{(args.host_swap_bytes or 0) / 2**20:.1f} MiB watermark"
+                 if args.swap_spool_dir else "")
               + f" — {eng.executor.swap_bytes_per_slot / 2**10:.1f} "
               f"KiB/swap from cache_spec")
     if args.speculative:
@@ -285,6 +318,15 @@ def main():
               f"swap-ins, {m['swap_bytes'] / 2**20:.2f} MiB moved "
               f"({us_mb:.0f} us/MiB), {m['swapped']} session(s) parked "
               f"on host at exit")
+        print(f"    dispatch {m['swap_dispatch_s'] * 1e3:.2f} ms / stall "
+              f"{m['swap_stall_s'] * 1e3:.2f} ms"
+              + (f", {m['swap_harvests_overlapped']} overlapped + "
+                 f"{m['swap_harvests_forced']} forced harvests, "
+                 f"{m['swap_prefetch_hits']}/{m['swap_prefetches']} "
+                 f"prefetch hits" if args.async_paging else "")
+              + (f", {m['spills']} spills / {m['spill_loads']} reloads "
+                 f"({m['spill_bytes'] / 2**20:.2f} MiB spooled)"
+                 if args.swap_spool_dir else ""))
     for r in done[:4]:
         print(f"  req {r.rid}: ttft {r.ttft_s * 1e3:.1f} ms, "
               f"{len(r.output)} toks: {list(r.output)}")

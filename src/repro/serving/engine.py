@@ -33,6 +33,24 @@ gains SWAPPED and RESUMING states (``Request.state``), ``swap_policy``
 eviction, and ``max_live_requests`` caps total admission including
 swapped sessions.  See ``docs/serving.md``.
 
+**Async paging** (``async_paging=True``): swap transfers overlap the
+decode tick instead of serializing with it.  A swap-out dispatches the
+gather program into a ring of ``gather_ring`` device-side buffers, frees
+the slot immediately and lets the D2H copy drain in the background
+(``copy_to_host_async``); the scheduler harvests completed drains at
+tick boundaries — a pending-swap ledger guarantees a draining buffer is
+never reused pre-harvest.  A predictable resume grant prestages its H2D
+put one tick ahead so the grant-boundary scatter consumes an
+already-device-resident image; a cancelled resume drops the prefetch.
+Gather outputs snapshot values at dispatch, so streams stay bitwise
+identical to the synchronous fallback (``async_paging=False``, the
+default).  ``metrics()`` splits ``swap_s`` into ``swap_dispatch_s`` /
+``swap_stall_s`` plus gather/put/scatter and overlap-ratio breakdowns.
+Beyond a ``host_swap_bytes`` watermark of in-memory swapped images, the
+coldest dormant ``SwappedState`` spills to an ``.npz`` under
+``swap_spool_dir`` and reloads transparently on resume (spill-to-disk
+tier for truly cold sessions).  See ``docs/serving.md``.
+
 **Speculative decode** (draft–verify with recurrent-state rollback):
 ``speculative=True`` runs the whole draft–verify loop inside the
 device-resident tick.  A draft model (``draft_cfg``/``draft_params``;

@@ -68,7 +68,8 @@ their placement across ticks.
 from __future__ import annotations
 
 import warnings
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from collections import deque
+from typing import Any, Deque, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -137,6 +138,39 @@ class SwappedState(NamedTuple):
         leaves = (jax.tree.leaves(self.caches)
                   + list(self.sampler.values()) + [self.token])
         return int(sum(np.asarray(x).nbytes for x in leaves))
+
+
+class PendingSwap:
+    """Ledger entry for one in-flight asynchronous swap-out: the gathered
+    device arrays (staging layout — they ARE the gather buffer, pinned
+    alive by this record while ``copy_to_host_async`` drains them to host
+    in the background) plus the gather-ring ticket ``buf`` that bounds
+    how many drains may be outstanding.  ``DeviceExecutor.harvest``
+    materializes the record into a ``SwappedState`` and only then
+    returns the ticket — a draining buffer is never reused pre-harvest.
+    """
+
+    __slots__ = ("buf", "st", "row", "tok", "nbytes")
+
+    def __init__(self, buf: int, st, row, tok):
+        self.buf = buf
+        self.st, self.row, self.tok = st, row, tok
+        self.nbytes = int(sum(x.nbytes for x in
+                              jax.tree.leaves((st, row, tok))))
+        # start the background D2H drain; the later harvest device_get
+        # then finds the host copy already (or mostly) resident
+        for leaf in jax.tree.leaves((st, row, tok)):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+
+    def ready(self) -> bool:
+        """True when every gathered array's transfer has completed (the
+        harvest device_get will not block).  Conservatively True when
+        the backend lacks ``is_ready`` — the harvest still overlapped at
+        least one full tick of compute."""
+        return all(leaf.is_ready() for leaf in
+                   jax.tree.leaves((self.st, self.row, self.tok))
+                   if hasattr(leaf, "is_ready"))
 
 
 def _gather_fn(caches, sampler, tokens, slot):
@@ -218,10 +252,14 @@ class DeviceExecutor:
                  plan_mode: str = "masked",
                  prefill_batching: Optional[bool] = None,
                  draft_cfg: Optional[ArchConfig] = None, draft_params=None,
-                 k_draft: int = 4):
+                 k_draft: int = 4, async_paging: bool = False,
+                 gather_ring: int = 2):
         if staging_depth < 1:
             raise ValueError(
                 f"staging_depth must be >= 1, got {staging_depth}")
+        if gather_ring < 1:
+            raise ValueError(
+                f"gather_ring must be >= 1, got {gather_ring}")
         if plan_mode not in ("masked", "pow2"):
             raise ValueError(f"plan_mode must be 'masked' or 'pow2', "
                              f"got {plan_mode!r}")
@@ -454,6 +492,17 @@ class DeviceExecutor:
         # state-paging gathers (lazy — engines that never swap pay nothing)
         self._gather_p = None
         self._bgather_p = None
+        # async-paging gather ring: ``gather_ring`` tickets bound how many
+        # swap-outs may drain D2H concurrently.  The gathered arrays (the
+        # _gather_p outputs are fresh, never-donated buffers) double as
+        # the ring's storage, so the ledger is just the ticket ids: a
+        # ticket leaves ``_gather_free`` at dispatch and returns only at
+        # ``harvest`` — XLA cannot recycle a draining buffer because the
+        # PendingSwap holds the only live reference until then.
+        self.async_paging = bool(async_paging)
+        self.gather_ring = gather_ring
+        self._gather_free: Deque[int] = deque(range(gather_ring))
+        self._gather_pending: Dict[int, PendingSwap] = {}
         # donate only the slot buffers: the staging pytree's (repeats, 1,
         # ...) leaves have no same-shape output to alias (XLA would warn)
         self._scatter_p = self._jit(
@@ -950,13 +999,28 @@ class DeviceExecutor:
         st, row, tok = jax.device_get((st, row, tok))
         return SwappedState(caches=st, sampler=row, token=np.asarray(tok))
 
-    def gather_slot(self, slot: int) -> SwappedState:
-        """Swap a resident request out of slot ``slot``: ONE program
-        slices its cache column + sampler row + last token (the inverse
-        of the slot scatter) and freezes the vacated slot's done flag,
-        then the slices are fetched to host memory.  The gathered pytree
-        is exactly the staging layout, so ``restore_slot`` re-admits it
-        through the existing slot-scatter program bitwise-identically."""
+    def _acquire_ticket(self) -> int:
+        """Claim a gather-ring ticket for one async swap-out dispatch.
+        The scheduler is responsible for capacity (force-harvesting the
+        oldest drain when the ring is full), so an empty ring here is a
+        ledger bug, not backpressure."""
+        if not self._gather_free:
+            raise RuntimeError(
+                f"gather ring exhausted: all {self.gather_ring} buffers "
+                f"are draining — harvest a pending swap before "
+                f"dispatching another gather")
+        return self._gather_free.popleft()
+
+    def gather_slot_async(self, slot: int) -> PendingSwap:
+        """Dispatch the swap-out of resident slot ``slot`` without
+        waiting for the D2H transfer: ONE program slices its cache
+        column + sampler row + last token (the inverse of the slot
+        scatter) and freezes the vacated slot's done flag; the fresh
+        output arrays become a gather-ring buffer whose host copy drains
+        in the background (``copy_to_host_async`` inside PendingSwap).
+        The slot is reusable the moment this returns — the gathered
+        values are a snapshot, so later scatters into the slot cannot
+        perturb the eventual ``harvest``."""
         if self._gather_p is None:
             self._gather_p = self._jit(
                 _gather_fn, donate=(1,),
@@ -965,26 +1029,37 @@ class DeviceExecutor:
                 out_sh=((self._sh_staging, self._sh_row, self._sh_rep,
                          self._sh_sampler)
                         if self.mesh is not None else None))
+        buf = self._acquire_ticket()
         st, row, tok, self.sampler = self._gather_p(
             self.caches, self.sampler, self.tokens, jnp.int32(slot))
-        return self._host_state(st, row, tok)
+        pend = PendingSwap(buf, st, row, tok)
+        self._gather_pending[buf] = pend
+        return pend
 
-    def gather_staging(self, buf: int) -> SwappedState:
-        """Gather per-prompt ring buffer ``buf`` (a staged-ready request
-        pausing at the admit boundary, before its slot scatter): the
-        staging cache, admit-advanced sampler row and first token are
-        already in staging layout — a host fetch, no program.  The
-        buffer returns to the ring dirty (``stage_begin`` re-zeros it)."""
-        sw = self._host_state(self.staging[buf], self.staging_row[buf],
-                              self.staging_tok[buf])
-        self.staging_row[buf] = None
-        self.staging_tok[buf] = None
-        return sw
+    def gather_staging_async(self, buf_ring: int) -> PendingSwap:
+        """Dispatch the swap-out of per-prompt ring buffer ``buf_ring``
+        (a staged-ready request pausing at the admit boundary, before
+        its slot scatter): the staging cache, admit-advanced sampler row
+        and first token are already in staging layout — no program, the
+        PendingSwap takes direct refs.  Holding them across a later
+        ``stage_begin`` is safe: that path REPLACES ``staging[buf]``
+        with fresh zeros, it never donates the old arrays.  The buffer
+        returns to the ring dirty (``stage_begin`` re-zeros it)."""
+        buf = self._acquire_ticket()
+        pend = PendingSwap(buf, self.staging[buf_ring],
+                           self.staging_row[buf_ring],
+                           self.staging_tok[buf_ring])
+        self.staging_row[buf_ring] = None
+        self.staging_tok[buf_ring] = None
+        self._gather_pending[buf] = pend
+        return pend
 
-    def bgather_row(self, row: int) -> SwappedState:
-        """Gather batched staging row ``row`` (the admit-boundary swap on
-        the batched path).  Pure read — the caller marks the row dirty
-        so the next multi-row scatter release-zeroes it."""
+    def bgather_row_async(self, row: int) -> PendingSwap:
+        """Dispatch the swap-out of batched staging row ``row`` (the
+        admit-boundary swap on the batched path).  Pure read — the
+        caller marks the row dirty so the next multi-row scatter
+        release-zeroes it; the gather outputs are fresh arrays, immune
+        to that zeroing."""
         self._ensure_batched()
         if self._bgather_p is None:
             self._bgather_p = self._jit(
@@ -993,22 +1068,74 @@ class DeviceExecutor:
                        self._sh_btoks, self._sh_rep),
                 out_sh=((self._sh_staging, self._sh_row, self._sh_rep)
                         if self.mesh is not None else None))
+        buf = self._acquire_ticket()
         st, row_, tok = self._bgather_p(self.bstaging, self.bsampler,
                                         self.btoks, jnp.int32(row))
-        return self._host_state(st, row_, tok)
+        pend = PendingSwap(buf, st, row_, tok)
+        self._gather_pending[buf] = pend
+        return pend
 
-    def restore_slot(self, slot: int, sw: SwappedState):
-        """Swap-in: put the host-side ``SwappedState`` back on device in
-        staging layout (re-sharded under a mesh by the scatter's
-        in_shardings) and re-admit it through the EXISTING slot-scatter
-        program — the same donated dynamic_update_slice every fresh
-        admit takes, so a resumed request's slot residency is bitwise
-        what it was at gather time."""
+    def harvest(self, pend: PendingSwap) -> SwappedState:
+        """Materialize a draining swap-out into host numpy and return
+        its gather-ring ticket.  Blocks only for whatever part of the
+        D2H transfer has not already drained (zero when
+        ``pend.ready()``).  The PendingSwap's device refs are dropped so
+        XLA can recycle the buffer."""
+        if self._gather_pending.get(pend.buf) is not pend:
+            raise RuntimeError(
+                f"harvest of gather buffer {pend.buf} that is not "
+                f"draining — double harvest or foreign PendingSwap")
+        sw = self._host_state(pend.st, pend.row, pend.tok)
+        pend.st = pend.row = pend.tok = None
+        del self._gather_pending[pend.buf]
+        self._gather_free.append(pend.buf)
+        return sw
+
+    # synchronous façade: dispatch + immediate harvest runs the exact
+    # same programs on the same operands, so values are bitwise
+    # identical to the async path — only the wait moves.
+    def gather_slot(self, slot: int) -> SwappedState:
+        """Swap a resident request out of slot ``slot``, blocking until
+        its host image is materialized (``gather_slot_async`` without
+        the overlap)."""
+        return self.harvest(self.gather_slot_async(slot))
+
+    def gather_staging(self, buf: int) -> SwappedState:
+        """Gather per-prompt ring buffer ``buf``, blocking (see
+        ``gather_staging_async``)."""
+        return self.harvest(self.gather_staging_async(buf))
+
+    def bgather_row(self, row: int) -> SwappedState:
+        """Gather batched staging row ``row``, blocking (see
+        ``bgather_row_async``)."""
+        return self.harvest(self.bgather_row_async(row))
+
+    def prestage_restore(self, sw: SwappedState):
+        """H2D-stage a swapped image for a later ``restore_slot``: the
+        device_put (re-sharded under a mesh to the staging/row/replicated
+        shardings the scatter expects) happens NOW, the grant-boundary
+        scatter later consumes the already-resident triple.  Safe to
+        hold across ticks: ``_scatter_p`` donates only the slot buffers
+        (args 0–2), never its staging operands, so a prestaged triple
+        survives unrelated admits and scatters; a cancelled resume just
+        drops the triple."""
         st = self._put(jax.tree.map(jnp.asarray, sw.caches),
                        self._sh_staging)
         row = self._put({k: jnp.asarray(v) for k, v in sw.sampler.items()},
                         self._sh_row)
         tok = self._put(jnp.asarray(sw.token), self._sh_rep)
+        return st, row, tok
+
+    def restore_slot(self, slot: int, sw: SwappedState, prestaged=None):
+        """Swap-in: put the host-side ``SwappedState`` back on device in
+        staging layout (via ``prestage_restore``, or consuming an
+        already-prestaged triple) and re-admit it through the EXISTING
+        slot-scatter program — the same donated dynamic_update_slice
+        every fresh admit takes, so a resumed request's slot residency
+        is bitwise what it was at gather time whether or not the put was
+        prefetched."""
+        st, row, tok = (prestaged if prestaged is not None
+                        else self.prestage_restore(sw))
         self.caches, self.sampler, self.tokens = self._scatter_p(
             self.caches, self.sampler, self.tokens, st, row, tok,
             jnp.int32(slot))

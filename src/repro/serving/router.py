@@ -296,6 +296,19 @@ class Router:
             "resuming": sum(m["resuming"] for m in per),
             "swap_s": sum(m["swap_s"] for m in per),
             "swap_bytes": sum(m["swap_bytes"] for m in per),
+            "swap_dispatch_s": sum(m["swap_dispatch_s"] for m in per),
+            "swap_stall_s": sum(m["swap_stall_s"] for m in per),
+            "swap_prefetches": sum(m["swap_prefetches"] for m in per),
+            "swap_prefetch_hits": sum(m["swap_prefetch_hits"]
+                                      for m in per),
+            "swap_harvests_overlapped": sum(m["swap_harvests_overlapped"]
+                                            for m in per),
+            "swap_harvests_forced": sum(m["swap_harvests_forced"]
+                                        for m in per),
+            "draining_swaps": sum(m["draining_swaps"] for m in per),
+            "spills": sum(m["spills"] for m in per),
+            "spill_loads": sum(m["spill_loads"] for m in per),
+            "spill_bytes": sum(m["spill_bytes"] for m in per),
             "speculative": int(all(m["speculative"] for m in per)),
             "spec_ticks": sum(m["spec_ticks"] for m in per),
             "drafted_tokens": sum(m["drafted_tokens"] for m in per),

@@ -59,16 +59,19 @@ Wall-clock metrics (TTFT, latency, throughput) are stamped per request;
 """
 from __future__ import annotations
 
+import os
 import time
 import warnings
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
+import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.serving.executor import DeviceExecutor, PlanStep, SwappedState
+from repro.serving.executor import (DeviceExecutor, PendingSwap, PlanStep,
+                                    SwappedState)
 
 
 # request lifecycle states (the serving.md diagram): a request is QUEUED,
@@ -79,6 +82,14 @@ from repro.serving.executor import DeviceExecutor, PlanStep, SwappedState
 # for a granted slot to scatter back into)
 QUEUED, STAGING, READY, ACTIVE = "queued", "staging", "ready", "active"
 SWAPPED, RESUMING, DONE = "swapped", "resuming", "done"
+# sub-phases of a swap record under async paging / spill (the request's
+# lifecycle state stays SWAPPED or RESUMING — these describe where its
+# *image* is): DRAINING = gather dispatched, D2H still in flight;
+# HOSTED = image is host numpy; PREFETCHED = image prestaged back on
+# device awaiting a predicted grant; SPILLED = image is an .npz in the
+# spool dir
+DRAINING, HOSTED = "draining", "hosted"
+PREFETCHED, SPILLED = "prefetched", "spilled"
 
 
 @dataclass
@@ -180,10 +191,33 @@ class _Staging:
 class _Swapped:
     """One swapped-out request: its host-side device image (None when it
     was paused straight out of the queue — nothing was resident to
-    gather) and the wall-clock stamp the swap started at."""
+    gather) and the wall-clock stamp the swap started at (the gather
+    *dispatch*, so parked-time exclusion spans dispatch → restore
+    scatter regardless of when the drain is harvested).
+
+    Under async paging the image moves through sub-phases: ``pending``
+    holds the in-flight gather (DRAINING) until a harvest materializes
+    ``state``; ``prefetch`` holds a device-resident restore triple
+    (PREFETCHED) staged ahead of a predicted grant; ``spool`` points at
+    an on-disk .npz (SPILLED) once the host watermark pushed the image
+    out of memory."""
     req: Request
     state: Optional[SwappedState]
     t_swap: float
+    pending: Optional[PendingSwap] = None
+    prefetch: Optional[tuple] = None
+    spool: Optional[str] = None
+    spool_treedef: Any = None
+
+    @property
+    def phase(self) -> str:
+        if self.pending is not None:
+            return DRAINING
+        if self.prefetch is not None:
+            return PREFETCHED
+        if self.spool is not None:
+            return SPILLED
+        return HOSTED
 
 
 class Scheduler:
@@ -199,6 +233,9 @@ class Scheduler:
                  swap_policy: str = "manual",
                  idle_swap_ms: Optional[float] = None,
                  max_live_requests: Optional[int] = None,
+                 async_paging: bool = False, gather_ring: int = 2,
+                 host_swap_bytes: Optional[int] = None,
+                 swap_spool_dir: Optional[str] = None,
                  speculative: bool = False, draft_cfg=None,
                  draft_params=None, k_draft: int = 4):
         if decode_block < 1:
@@ -218,6 +255,13 @@ class Scheduler:
         if max_live_requests is not None and max_live_requests < 1:
             raise ValueError(f"max_live_requests must be >= 1, got "
                              f"{max_live_requests}")
+        if host_swap_bytes is not None and host_swap_bytes < 0:
+            raise ValueError(f"host_swap_bytes must be >= 0, got "
+                             f"{host_swap_bytes}")
+        if host_swap_bytes is not None and swap_spool_dir is None:
+            raise ValueError("host_swap_bytes is a spill watermark — set "
+                             "swap_spool_dir so cold images have "
+                             "somewhere to go")
         if (draft_cfg is not None or draft_params is not None) \
                 and not speculative:
             raise ValueError("draft_cfg/draft_params given without "
@@ -244,7 +288,8 @@ class Scheduler:
             prefill_batching=prefill_batching,
             draft_cfg=draft_cfg if speculative else None,
             draft_params=draft_params if speculative else None,
-            k_draft=k_draft)
+            k_draft=k_draft, async_paging=async_paging,
+            gather_ring=gather_ring)
         # per-tick prefill token budget of the batched packer, in
         # scan-chunk units (an admit dispatch costs one unit).  The
         # default lets every staging row take a full scan + admit per
@@ -277,6 +322,17 @@ class Scheduler:
         self.swapped: Dict[int, _Swapped] = {}
         self.resume_q: Deque[int] = deque()
         self._grant_resume_next = True
+        # async paging: rids whose gather is still draining D2H, in
+        # dispatch order — the force-harvest order when the gather ring
+        # runs out of buffers
+        self.async_paging = bool(async_paging)
+        self._draining_q: Deque[int] = deque()
+        # spill-to-disk tier: beyond host_swap_bytes of in-memory swapped
+        # images, the coldest dormant image spills to an .npz under
+        # swap_spool_dir (a spool dir with no watermark spills every
+        # dormant image — watermark 0)
+        self.host_swap_bytes = host_swap_bytes
+        self.swap_spool_dir = swap_spool_dir
         # speculative tick pipeline: drafts for the NEXT tick are
         # dispatched at the END of step() (async JAX dispatch overlaps
         # the draft with host-side emission/admit work — the serving
@@ -299,6 +355,26 @@ class Scheduler:
         self.swap_ins = 0           # restores through the slot scatter
         self.swap_s = 0.0           # wall time inside swap transfers
         self.swap_bytes = 0         # bytes moved (both directions)
+        # swap_s split: dispatch = async program/put launches + harvests
+        # of already-drained transfers (work the tick loop never waits
+        # on); stall = blocking waits async paging exists to hide
+        # (forced/sync harvests, inline puts).  Invariant:
+        # swap_s == swap_dispatch_s + swap_stall_s.
+        self.swap_dispatch_s = 0.0
+        self.swap_stall_s = 0.0
+        # direction breakdown (gather+harvest / put / scatter — sums to
+        # swap_s too; benchmarks report these in µs)
+        self.swap_gather_s = 0.0
+        self.swap_put_s = 0.0
+        self.swap_scatter_s = 0.0
+        self.swap_prefetches = 0    # restore triples prestaged ahead
+        self.swap_prefetch_hits = 0  # grants that consumed a prefetch
+        self.swap_prefetch_drops = 0  # prefetches cancelled un-consumed
+        self.swap_harvests_overlapped = 0  # drain done before harvest
+        self.swap_harvests_forced = 0      # harvest had to block
+        self.spills = 0             # images written to the spool dir
+        self.spill_loads = 0        # images read back on resume
+        self.spill_bytes = 0        # bytes written to disk
         self._metrics_seen: set = set()  # id() of requests already
                                     # counted before reset_metrics
 
@@ -440,11 +516,21 @@ class Scheduler:
         host numpy in the topology-free staging layout, so the router
         can migrate a resume claim to any engine with the same arch
         config — swap-aware rebalance.  Newest-first keeps the FIFO head
-        of this engine's resume queue (same rationale as ``withdraw``)."""
+        of this engine's resume queue (same rationale as ``withdraw``).
+
+        Migration waits for harvest: a still-draining gather is
+        force-harvested and a spilled image reloaded, so the record
+        leaves with a complete in-memory image; a prestaged prefetch is
+        device-resident on THIS engine's mesh and is dropped."""
         if not self.resume_q:
             return None
         rid = self.resume_q.pop()
         rec = self.swapped.pop(rid)
+        if rec.pending is not None:
+            self._harvest(rec, forced=not rec.pending.ready())
+        if rec.spool is not None:
+            self._load_spill(rec)
+        self._drop_prefetch(rec)
         idx = next(i for i, r in enumerate(self._all)
                    if r is rec.req)
         del self._all[idx]
@@ -512,6 +598,8 @@ class Scheduler:
             rec = self.swapped[rid]
             if rid in self.resume_q:
                 self.resume_q.remove(rid)
+                self._drop_prefetch(rec)    # cancelled resume: the
+                # prestaged device image is dropped cleanly
                 rec.req.state = SWAPPED
                 return rec.req
             raise ValueError(f"req {rid} is already swapped out")
@@ -560,7 +648,8 @@ class Scheduler:
         if rid in self.resume_q:
             raise ValueError(f"req {rid} is already resuming")
         req = rec.req
-        if rec.state is None:
+        if (rec.state is None and rec.pending is None
+                and rec.spool is None):
             now = time.perf_counter()
             req.swapped_s += now - rec.t_swap
             req._swapped_pre_first_s += now - rec.t_swap
@@ -619,16 +708,71 @@ class Scheduler:
                    key=lambda s: (self.active[s].priority,
                                   -(self.active[s]._t_active or 0.0)))
 
+    def _ensure_gather_capacity(self):
+        """Make room for one more async gather dispatch: when every
+        gather-ring buffer is draining, force-harvest the oldest drain —
+        the ledger guarantee that a draining buffer is never reused
+        before harvest, paid for as stall instead of corruption."""
+        while not self.executor._gather_free:
+            self._harvest(self.swapped[self._draining_q[0]], forced=True)
+
+    def _harvest(self, rec: _Swapped, *, forced: bool):
+        """Materialize a DRAINING record's host image.  ``forced`` means
+        the tick loop is blocking on it (sync path, ring pressure, or a
+        grant that beat the drain) — that wait is the stall async paging
+        exists to hide; an un-forced harvest found the transfer already
+        complete and costs only the host-side copy-out."""
+        t0 = time.perf_counter()
+        rec.state = self.executor.harvest(rec.pending)
+        dt = time.perf_counter() - t0
+        rec.pending = None
+        self._draining_q.remove(rec.req.rid)
+        self.swap_s += dt
+        self.swap_gather_s += dt
+        if forced:
+            self.swap_stall_s += dt
+            self.swap_harvests_forced += 1
+        else:
+            self.swap_dispatch_s += dt
+            self.swap_harvests_overlapped += 1
+
+    def _harvest_sweep(self):
+        """Tick-boundary harvest of every drain whose D2H transfer has
+        completed — the background traffic lands without ever blocking
+        decode."""
+        for rid in list(self._draining_q):
+            rec = self.swapped[rid]
+            if rec.pending.ready():
+                self._harvest(rec, forced=False)
+
+    def flush_swaps(self):
+        """Harvest ALL draining swap-outs now (tests/benches, and any
+        caller that wants to inspect ``.state`` deterministically).
+        Completed drains harvest as overlapped; incomplete ones stall."""
+        while self._draining_q:
+            rec = self.swapped[self._draining_q[0]]
+            self._harvest(rec, forced=not rec.pending.ready())
+
     def _swap_out_active(self, slot: int, *, resume: bool = False):
         req = self.active.pop(slot)
         t0 = time.perf_counter()
-        sw = self.executor.gather_slot(slot)
+        self._ensure_gather_capacity()
+        pend = self.executor.gather_slot_async(slot)
         t1 = time.perf_counter()
         self.swap_s += t1 - t0
+        self.swap_dispatch_s += t1 - t0
+        self.swap_gather_s += t1 - t0
         self.swap_outs += 1
-        self.swap_bytes += sw.nbytes
+        self.swap_bytes += pend.nbytes
         self.free.append(slot)
-        self.swapped[req.rid] = _Swapped(req=req, state=sw, t_swap=t1)
+        # t_swap is the DISPATCH stamp: parked-time exclusion spans
+        # dispatch -> restore scatter, so overlapping the drain cannot
+        # inflate reported TTFT/throughput
+        rec = _Swapped(req=req, state=None, t_swap=t0, pending=pend)
+        self.swapped[req.rid] = rec
+        self._draining_q.append(req.rid)
+        if not self.async_paging:
+            self._harvest(rec, forced=True)     # sync fallback: block now
         if resume:
             self.resume_q.append(req.rid)
             req.state = RESUMING
@@ -642,28 +786,52 @@ class Scheduler:
         instead of a slot column."""
         req = st.req
         t0 = time.perf_counter()
+        self._ensure_gather_capacity()
         if self.executor.prefill_batching:
-            sw = self.executor.bgather_row(st.buf)
+            pend = self.executor.bgather_row_async(st.buf)
             self._dirty_rows.add(st.buf)  # release-zeroed, then freed
         else:
-            sw = self.executor.gather_staging(st.buf)
+            pend = self.executor.gather_staging_async(st.buf)
             self._free_bufs.append(st.buf)
         t1 = time.perf_counter()
         self.swap_s += t1 - t0
+        self.swap_dispatch_s += t1 - t0
+        self.swap_gather_s += t1 - t0
         self.swap_outs += 1
-        self.swap_bytes += sw.nbytes
+        self.swap_bytes += pend.nbytes
         self._stagings.remove(st)
-        self.swapped[req.rid] = _Swapped(req=req, state=sw, t_swap=t1)
+        rec = _Swapped(req=req, state=None, t_swap=t0, pending=pend)
+        self.swapped[req.rid] = rec
+        self._draining_q.append(req.rid)
+        if not self.async_paging:
+            self._harvest(rec, forced=True)
         req.state = SWAPPED
 
     def _swap_in(self, rid: int, slot: int):
         rec = self.swapped.pop(rid)
         req = rec.req
+        if rec.pending is not None:     # grant beat the drain
+            self._harvest(rec, forced=not rec.pending.ready())
+        if rec.spool is not None:
+            self._load_spill(rec)
         t0 = time.perf_counter()
-        self.executor.restore_slot(slot, rec.state)
+        if rec.prefetch is not None:
+            prestaged, rec.prefetch = rec.prefetch, None
+            self.swap_prefetch_hits += 1
+            t1 = t0
+        else:
+            # inline put: the stall a prefetched grant avoids
+            prestaged = self.executor.prestage_restore(rec.state)
+            t1 = time.perf_counter()
+            self.swap_s += t1 - t0
+            self.swap_stall_s += t1 - t0
+            self.swap_put_s += t1 - t0
+        self.executor.restore_slot(slot, rec.state, prestaged=prestaged)
         self.scatter_dispatches += 1
         now = time.perf_counter()
-        self.swap_s += now - t0
+        self.swap_s += now - t1
+        self.swap_dispatch_s += now - t1
+        self.swap_scatter_s += now - t1
         self.swap_ins += 1
         self.swap_bytes += rec.state.nbytes
         req.swapped_s += now - rec.t_swap
@@ -672,6 +840,93 @@ class Scheduler:
         req._t_active = now
         req.t_last_activity = now
         self._draft_activate(slot, req)
+
+    def _prefetch_resume(self):
+        """Prestage the head resume claim's H2D put one tick ahead of a
+        *predictable* grant (a slot is already free, or some active slot
+        is within one tick of its budget) so the grant-boundary scatter
+        consumes an already-device-resident image.  A cancelled resume
+        just drops the triple (``pause``/``withdraw_swapped``)."""
+        if not self.resume_q:
+            return
+        rec = self.swapped[self.resume_q[0]]
+        if rec.prefetch is not None:
+            return
+        if not (self.free or any(
+                r.max_new_tokens - len(r.output) <= self.decode_block
+                for r in self.active.values())):
+            return
+        if rec.pending is not None:
+            if not rec.pending.ready():
+                return              # draining: let the D2H finish first
+            self._harvest(rec, forced=False)
+        if rec.spool is not None:
+            self._load_spill(rec)
+        t0 = time.perf_counter()
+        rec.prefetch = self.executor.prestage_restore(rec.state)
+        dt = time.perf_counter() - t0
+        self.swap_s += dt
+        self.swap_dispatch_s += dt
+        self.swap_put_s += dt
+        self.swap_prefetches += 1
+
+    def _drop_prefetch(self, rec: _Swapped):
+        if rec.prefetch is not None:
+            rec.prefetch = None
+            self.swap_prefetch_drops += 1
+
+    # ---------------------------------------------------- spill-to-disk
+    def _spill_path(self, rid: int) -> str:
+        return os.path.join(self.swap_spool_dir, f"swap-{rid}.npz")
+
+    def _apply_spill(self):
+        """Push the coldest dormant images out to the spool dir until
+        in-memory swapped bytes fit under the ``host_swap_bytes``
+        watermark.  Only images nothing is about to touch are eligible:
+        not draining, not prefetched, not queued for resume."""
+        limit = self.host_swap_bytes or 0
+        while True:
+            held = [r for r in self.swapped.values()
+                    if r.state is not None]
+            if sum(r.state.nbytes for r in held) <= limit:
+                return
+            cold = [r for r in held
+                    if r.req.rid not in self.resume_q
+                    and r.prefetch is None]
+            if not cold:
+                return
+            self._spill(min(cold, key=lambda r: r.t_swap))
+
+    def _spill(self, rec: _Swapped):
+        os.makedirs(self.swap_spool_dir, exist_ok=True)
+        path = self._spill_path(rec.req.rid)
+        leaves, treedef = jax.tree_util.tree_flatten(rec.state.caches)
+        np.savez(path, token=rec.state.token,
+                 **{f"cache_{i}": leaf for i, leaf in enumerate(leaves)},
+                 **{f"sampler_{k}": v
+                    for k, v in rec.state.sampler.items()})
+        rec.spool = path
+        rec.spool_treedef = treedef     # structure stays in memory —
+        # the leaves are what cost bytes
+        self.spills += 1
+        self.spill_bytes += rec.state.nbytes
+        rec.state = None
+
+    def _load_spill(self, rec: _Swapped):
+        """Transparent reload on resume: rebuild the ``SwappedState``
+        from the .npz and delete the spool file."""
+        with np.load(rec.spool) as z:
+            n = sum(1 for k in z.files if k.startswith("cache_"))
+            caches = jax.tree_util.tree_unflatten(
+                rec.spool_treedef, [z[f"cache_{i}"] for i in range(n)])
+            sampler = {k[len("sampler_"):]: z[k] for k in z.files
+                       if k.startswith("sampler_")}
+            rec.state = SwappedState(caches=caches, sampler=sampler,
+                                     token=z["token"])
+        os.remove(rec.spool)
+        rec.spool = None
+        rec.spool_treedef = None
+        self.spill_loads += 1
 
     def _grant_resume(self) -> bool:
         """True when the next freed slot goes to the resume queue rather
@@ -1094,9 +1349,15 @@ class Scheduler:
                                  if r.rid == rid), None)
                     if slot is not None:    # may have finished in verify
                         self._swap_out_active(slot, resume=res)
+        if self.async_paging and self._draining_q:
+            self._harvest_sweep()
+        if self.swap_spool_dir is not None:
+            self._apply_spill()
         if self.swap_policy != "manual":
             self._apply_swap_policy()
         self._admit()
+        if self.async_paging:
+            self._prefetch_resume()
         if not self.active:
             return
         k = self._spec_k()
@@ -1118,9 +1379,15 @@ class Scheduler:
         untouched."""
         if self.speculative:
             return self._step_speculative()
+        if self.async_paging and self._draining_q:
+            self._harvest_sweep()
+        if self.swap_spool_dir is not None:
+            self._apply_spill()
         if self.swap_policy != "manual":
             self._apply_swap_policy()
         self._admit()
+        if self.async_paging:
+            self._prefetch_resume()
         if not self.active:
             return
         k = self._tick_k()
@@ -1186,6 +1453,19 @@ class Scheduler:
         self.swap_ins = 0
         self.swap_s = 0.0
         self.swap_bytes = 0
+        self.swap_dispatch_s = 0.0
+        self.swap_stall_s = 0.0
+        self.swap_gather_s = 0.0
+        self.swap_put_s = 0.0
+        self.swap_scatter_s = 0.0
+        self.swap_prefetches = 0
+        self.swap_prefetch_hits = 0
+        self.swap_prefetch_drops = 0
+        self.swap_harvests_overlapped = 0
+        self.swap_harvests_forced = 0
+        self.spills = 0
+        self.spill_loads = 0
+        self.spill_bytes = 0
         self.spec_ticks = 0
         self.drafted_tokens = 0
         self.accepted_tokens = 0
@@ -1230,6 +1510,29 @@ class Scheduler:
                                / (self.swap_bytes / 2 ** 20)
                                if self.swap_bytes else 0.0),
             "swap_bytes_per_slot": self.executor.swap_bytes_per_slot,
+            "async_paging": int(self.async_paging),
+            "gather_ring": self.executor.gather_ring,
+            "swap_dispatch_s": self.swap_dispatch_s,
+            "swap_stall_s": self.swap_stall_s,
+            "swap_gather_s": self.swap_gather_s,
+            "swap_put_s": self.swap_put_s,
+            "swap_scatter_s": self.swap_scatter_s,
+            "swap_prefetches": self.swap_prefetches,
+            "swap_prefetch_hits": self.swap_prefetch_hits,
+            "swap_prefetch_drops": self.swap_prefetch_drops,
+            "swap_harvests_overlapped": self.swap_harvests_overlapped,
+            "swap_harvests_forced": self.swap_harvests_forced,
+            "swap_overlap_ratio": (
+                self.swap_harvests_overlapped
+                / max(1, self.swap_harvests_overlapped
+                      + self.swap_harvests_forced)),
+            "draining_swaps": len(self._draining_q),
+            "spills": self.spills,
+            "spill_loads": self.spill_loads,
+            "spill_bytes": self.spill_bytes,
+            "host_swap_bytes_held": sum(
+                r.state.nbytes for r in self.swapped.values()
+                if r.state is not None),
             "speculative": int(self.speculative),
             "k_draft": self.k_draft if self.speculative else 0,
             "spec_ticks": self.spec_ticks,

@@ -155,9 +155,15 @@ def _paging_engine():
     if "eng" not in _PAGING:
         cfg = configs.get_arch("qwen3-next-gdn").reduced()
         params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        # async paging with a deliberately tight 2-deep gather ring: the
+        # random interleavings then exercise background drains, forced
+        # harvests under ring pressure, prefetches and cancellations —
+        # the sync path's values are identical by construction and are
+        # pinned per-kind in tests/test_state_paging.py
         _PAGING["eng"] = DecodeEngine(cfg, params, max_slots=2,
                                       max_len=32, decode_block=2,
-                                      prefill_chunk=8, staging_depth=2)
+                                      prefill_chunk=8, staging_depth=2,
+                                      async_paging=True, gather_ring=2)
         _PAGING["rid"] = itertools.count()
     return _PAGING["eng"], _PAGING["rid"]
 
@@ -174,6 +180,12 @@ class PagingLifecycleMachine(stateful.RuleBasedStateMachine):
       * the resume queue is FIFO: grants only ever pop the oldest claim
         (the engine's queue is always a suffix of the order claims were
         filed);
+      * async paging keeps its ledgers sound under random harvest /
+        prefetch / cancel interleavings: a draining gather buffer is
+        never reused before harvest (free tickets and pending tickets
+        partition the ring), a prefetched image only ever belongs to a
+        filed resume claim (cancelling the claim drops the prefetch),
+        and swapped ∩ device = ∅ holds at every harvest boundary;
       * no request is lost or duplicated: once everything parked is
         reconnected, every submitted request finishes exactly once."""
 
@@ -247,6 +259,17 @@ class PagingLifecycleMachine(stateful.RuleBasedStateMachine):
         if req is not None:
             self.resume_order.append(req.rid)
 
+    @stateful.rule()
+    def harvest(self):
+        """Force every in-flight D2H drain to completion right now —
+        a harvest boundary at an arbitrary point in the interleaving."""
+        self.eng.flush_swaps()
+
+    @stateful.rule()
+    def prefetch(self):
+        """Run the prestage policy outside its usual tick position."""
+        self.eng._prefetch_resume()
+
     # --------------------------------------------------------- invariants
     @stateful.invariant()
     def slots_singly_occupied(self):
@@ -277,6 +300,35 @@ class PagingLifecycleMachine(stateful.RuleBasedStateMachine):
         assert len(set(eng.resume_q)) == len(eng.resume_q)
 
     @stateful.invariant()
+    def gather_ring_never_reused_before_harvest(self):
+        eng, ex = self.eng, self.eng.executor
+        free = list(ex._gather_free)
+        pending = set(ex._gather_pending)
+        assert len(set(free)) == len(free), "free ticket duplicated"
+        assert not set(free) & pending, "draining buffer handed out"
+        assert set(free) | pending == set(range(ex.gather_ring)), \
+            "gather ticket lost"
+        draining = {rid for rid, rec in eng.swapped.items()
+                    if rec.pending is not None}
+        assert set(eng._draining_q) == draining
+        assert len(set(eng._draining_q)) == len(eng._draining_q)
+        for rid in draining:
+            rec = eng.swapped[rid]
+            assert ex._gather_pending.get(rec.pending.buf) is rec.pending, \
+                "pending swap not registered under its ring ticket"
+            assert rec.state is None, "harvested record still marked draining"
+
+    @stateful.invariant()
+    def prefetch_only_backs_filed_claims(self):
+        eng = self.eng
+        for rid, rec in eng.swapped.items():
+            if rec.prefetch is not None:
+                assert rid in eng.resume_q, \
+                    "prefetched image survived a cancelled resume"
+                assert rec.pending is None and rec.state is not None, \
+                    "prefetch staged from an unharvested image"
+
+    @stateful.invariant()
     def resume_queue_is_fifo(self):
         rq = list(self.eng.resume_q)
         tail = self.resume_order[len(self.resume_order) - len(rq):] \
@@ -286,6 +338,10 @@ class PagingLifecycleMachine(stateful.RuleBasedStateMachine):
 
     def teardown(self):
         self._drain_previous()
+        ex = self.eng.executor
+        assert not ex._gather_pending and \
+            len(ex._gather_free) == ex.gather_ring, \
+            "gather tickets leaked across the example"
         for req in self.submitted:
             assert req.done, f"req {req.rid} lost"
             assert 1 <= len(req.output) <= req.max_new_tokens

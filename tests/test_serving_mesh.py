@@ -528,6 +528,126 @@ def test_sharded_swap_subprocess():
         r.stdout[-2000:] + r.stderr[-4000:]
 
 
+# ------------------------------- async state paging under a mesh (subproc)
+
+SUBPROCESS_ASYNC_PAGING_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import numpy as np
+    from repro import configs
+    from repro.models import lm
+    from repro.serving.engine import DecodeEngine, Request
+
+    cfg = configs.get_arch("qwen3-next-gdn").reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+
+    def reqs():
+        # rid 0 — the paused one — samples stochastically: the swapped
+        # image must round-trip the PRNG key mid-stream
+        return [Request(rid=i,
+                        prompt=np.arange(1, 7 + 3 * i, dtype=np.int32),
+                        max_new_tokens=6 + i,
+                        temperature=0.8 if i % 2 == 0 else 0.0,
+                        top_k=10 if i % 2 == 0 else 0,
+                        top_p=0.9 if i % 2 == 0 else 1.0)
+                for i in range(6)]
+
+    def serve(mesh, paged, async_paging=False):
+        eng = DecodeEngine(cfg, params, max_slots=4, max_len=64,
+                           decode_block=4, prefill_chunk=8, mesh=mesh,
+                           async_paging=async_paging)
+        rr = reqs()
+        for q in rr:
+            eng.submit(q)
+        if paged:
+            for _ in range(50):
+                eng.step()
+                if rr[0].state == "active" and len(rr[0].output) >= 2:
+                    break
+            assert rr[0].state == "active", rr[0].state
+            eng.pause(0)
+            if async_paging:
+                # slot freed at dispatch; the D2H drain is in flight
+                assert eng.swapped[0].pending is not None
+            eng.step()
+            eng.resume(0)
+        eng.run_until_done()
+        assert all(q.done for q in rr)
+        return eng, [list(q.output) for q in rr]
+
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                          devices=jax.devices()[:1])
+    mesh4 = jax.make_mesh((4, 1), ("data", "model"),
+                          devices=jax.devices()[:4])
+
+    # --- 1. bitwise parity: ASYNC pause/resume on a 1-device mesh and a
+    #        4-device data-sharded mesh both reproduce the synchronous
+    #        1-device paged run — which itself reproduces the
+    #        uninterrupted base streams exactly
+    _, base = serve(mesh1, False)
+    _, sync1 = serve(mesh1, True, async_paging=False)
+    assert sync1 == base, (sync1, base)
+    for mesh in (mesh1, mesh4):
+        eng, out = serve(mesh, True, async_paging=True)
+        assert out == base, (out, base)
+        m = eng.metrics()
+        assert m["async_paging"] == 1 and m["swap_outs"] >= 1
+
+    # --- 2. a prestaged (prefetched) restore image carries the
+    #        canonical staging placements leaf-by-leaf — the
+    #        grant-boundary scatter must consume it with zero relayout
+    eng = DecodeEngine(cfg, params, max_slots=4, max_len=64,
+                       decode_block=4, prefill_chunk=8, mesh=mesh4,
+                       async_paging=True)
+    rr = reqs()
+    for q in rr:
+        eng.submit(q)
+    for _ in range(50):
+        eng.step()
+        if rr[0].state == "active" and len(rr[0].output) >= 2:
+            break
+    assert rr[0].state == "active", rr[0].state
+    eng.pause(0)
+    eng.flush_swaps()            # harvest the drain so prestage can run
+    eng.resume(0)
+    eng._prefetch_resume()       # slot is free -> grant is predictable
+    rec = eng.swapped[0]
+    assert rec.prefetch is not None, "prefetch did not stage"
+    st, row, tok = rec.prefetch
+    x = eng.executor
+    got = [l.sharding for l in jax.tree.leaves(st)]
+    want = jax.tree.leaves(x._sh_staging)
+    assert len(got) == len(want) and got == want, \
+        list(zip(got, want))[:4]
+    row_got = [l.sharding for l in jax.tree.leaves(row)]
+    row_want = jax.tree.leaves(x._sh_row)
+    assert row_got == row_want, list(zip(row_got, row_want))[:4]
+    assert tok.sharding == x._sh_rep, tok.sharding
+    assert eng.metrics()["swap_prefetches"] >= 1
+    eng.run_until_done()
+    assert [list(q.output) for q in rr] == base
+    assert eng.metrics()["swap_prefetch_hits"] >= 1
+    print("SUBPROCESS_ASYNC_PAGING_OK")
+""")
+
+
+def test_sharded_async_swap_subprocess():
+    """Async pause/resume on a data-sharded mesh: streams bitwise equal
+    to the 1-device synchronous paged run, and a prefetched restore
+    image's leaf shardings match the executor's canonical staging /
+    sampler-row / replicated placements."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c",
+                        SUBPROCESS_ASYNC_PAGING_TEST],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=1800)
+    assert "SUBPROCESS_ASYNC_PAGING_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-4000:]
+
+
 # ------------------------------ speculative decode under a mesh (subproc)
 
 SUBPROCESS_SPEC_TEST = textwrap.dedent("""

@@ -27,7 +27,17 @@ here, per mixer family:
     lost it);
   * lifecycle errors: rid-keyed bookkeeping rejects duplicates, paging
     verbs reject wrong-state targets, ``max_live_requests`` caps
-    admission including swapped sessions.
+    admission including swapped sessions;
+  * async paging (``async_paging=True``): swap-outs drain D2H in the
+    background through a gather-buffer ring and resume grants prestage
+    their H2D put — gather outputs snapshot values at dispatch, so
+    streams are bitwise the synchronous ones for every mixer kind; the
+    ring ledger never reuses a draining buffer pre-harvest, a cancelled
+    resume drops its prefetch, ``swap_s`` splits into dispatch vs stall
+    and parked time spans gather dispatch -> restore scatter;
+  * spill-to-disk: beyond the ``host_swap_bytes`` watermark the coldest
+    dormant image spills to an .npz under ``swap_spool_dir`` and
+    reloads transparently (and bitwise) on resume.
 """
 import os
 import time
@@ -185,12 +195,15 @@ def _boundary_reqs():
                     top_p=0.9)]
 
 
+@pytest.mark.parametrize("async_paging", [False, True],
+                         ids=["sync", "async"])
 @pytest.mark.parametrize("batching", [None, False],
                          ids=["batched", "per_prompt"])
-def test_swap_at_admit_boundary(batching):
+def test_swap_at_admit_boundary(batching, async_paging):
     """Pause of a staged-ready request (first token drawn, no slot yet)
     gathers the staging row/buffer instead of a slot column; the resumed
-    stream is bitwise the uninterrupted one on both staging paths."""
+    stream is bitwise the uninterrupted one on both staging paths —
+    synchronous and async (background-drained) alike."""
     eng = _engine("gdn", max_slots=1, prefill_batching=batching)
     rr = _boundary_reqs()
     for r in rr:
@@ -198,7 +211,8 @@ def test_swap_at_admit_boundary(batching):
     eng.run_until_done()
     ref = _streams(rr)
 
-    eng = _engine("gdn", max_slots=1, prefill_batching=batching)
+    eng = _engine("gdn", max_slots=1, prefill_batching=batching,
+                  async_paging=async_paging)
     rr = _boundary_reqs()
     eng.submit(rr[0])
     eng.step()                                  # the only slot is busy
@@ -646,3 +660,234 @@ def test_max_live_requests_counts_swapped():
     eng.submit(Request(rid=9, prompt=np.arange(1, 5, dtype=np.int32),
                        max_new_tokens=2))       # seats freed by completion
     eng.run_until_done()
+
+
+# --------------------------------------------------------- async paging
+
+def _ring_ledger_ok(eng):
+    """Gather-ring ledger invariant: free tickets and draining tickets
+    partition the ring — a draining buffer is never re-issued."""
+    ex = eng.executor
+    free = set(ex._gather_free)
+    pend = set(ex._gather_pending)
+    assert not (free & pend)
+    assert free | pend == set(range(ex.gather_ring))
+    assert set(eng._draining_q) == {
+        rid for rid, rec in eng.swapped.items() if rec.pending is not None}
+    return True
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_async_paging_bitwise(kind):
+    """Async paging moves only the WAIT, never a value: a mixed
+    greedy+stochastic batch paused and resumed mid-decode under
+    background-drained swaps is bitwise the uninterrupted dedicated-slot
+    run — for every mixer family.  (Gather outputs snapshot the slot at
+    dispatch; sync vs async differ only in when device_get happens.)"""
+    ref = _ref_streams(kind, True)
+    eng = _engine(kind, async_paging=True)
+    reqs = _reqs(3, True)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: (reqs[0].state == sched.ACTIVE
+                              and len(reqs[0].output) >= 2))
+    eng.pause(0)
+    assert eng.swapped[0].phase == sched.DRAINING   # not yet harvested
+    assert _ring_ledger_ok(eng)
+    eng.step()                      # harvest sweep lands the drain
+    eng.step()
+    eng.resume(0)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert _streams(reqs) == ref
+    m = eng.metrics()
+    assert m["async_paging"] == 1
+    assert m["swap_harvests_overlapped"] + m["swap_harvests_forced"] \
+        == m["swap_outs"] >= 1
+    assert _ring_ledger_ok(eng)
+
+
+def test_async_ring_pressure_forces_harvest():
+    """More concurrent drains than gather buffers: the dispatch that
+    would overflow the ring force-harvests the oldest drain first — the
+    ledger holds at every point and the streams still match."""
+    ref = _ref_streams("gdn", False)
+    eng = _engine("gdn", async_paging=True, gather_ring=1)
+    reqs = _reqs(3, False)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: len(eng.active) == 2)
+    first = sorted(r.rid for r in eng.active.values())
+    eng.pause(first[0])             # fills the 1-deep ring
+    assert eng.swapped[first[0]].phase == sched.DRAINING
+    assert _ring_ledger_ok(eng)
+    eng.pause(first[1])             # must force-harvest the first drain
+    assert eng.swapped[first[0]].phase == sched.HOSTED
+    assert eng.swapped[first[1]].phase == sched.DRAINING
+    assert _ring_ledger_ok(eng)
+    assert eng.swap_harvests_forced >= 1
+    for rid in (first[0], first[1]):
+        eng.resume(rid)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert _streams(reqs) == ref
+
+
+def test_async_prefetch_consumed_and_cancelled():
+    """A predictable resume grant prestages its H2D put one tick ahead
+    and the grant consumes it; pausing the resuming request instead
+    drops the prefetch cleanly (no grant ever sees a stale image)."""
+    ref = _ref_streams("gdn", True)
+    eng = _engine("gdn", async_paging=True)
+    reqs = _reqs(3, True)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: (reqs[0].state == sched.ACTIVE
+                              and len(reqs[0].output) >= 2))
+    eng.pause(0)
+    eng.step()
+    eng.resume(0)
+    # no free slot yet: step until the head resume claim is prefetched
+    _step_until(eng, lambda: (0 not in eng.swapped
+                              or eng.swapped[0].prefetch is not None))
+    if 0 in eng.swapped:
+        assert eng.swapped[0].phase == sched.PREFETCHED
+        eng.pause(0)                # cancelled resume drops the triple
+        assert eng.swapped[0].prefetch is None
+        assert eng.swapped[0].phase == sched.HOSTED
+        assert eng.swap_prefetch_drops == 1
+        eng.resume(0)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert _streams(reqs) == ref
+    m = eng.metrics()
+    assert m["swap_prefetches"] >= 1
+
+
+def test_swap_timing_split_and_parked_from_dispatch():
+    """swap_s == swap_dispatch_s + swap_stall_s on both paths; the sync
+    fallback books every harvest as a forced stall while async books
+    background-completed drains as overlapped; and parked time spans
+    gather DISPATCH -> restore scatter, so a drain harvested late never
+    inflates reported throughput."""
+    for async_paging in (False, True):
+        eng = _engine("gdn", async_paging=async_paging)
+        reqs = _reqs(2, False)
+        for r in reqs:
+            eng.submit(r)
+        _step_until(eng, lambda: (reqs[0].state == sched.ACTIVE
+                                  and len(reqs[0].output) >= 2))
+        eng.pause(0)
+        time.sleep(0.05)            # drains in the background, unharvested
+        eng.resume(0)
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        m = eng.metrics()
+        assert m["swap_s"] == pytest.approx(
+            m["swap_dispatch_s"] + m["swap_stall_s"])
+        assert m["swap_s"] == pytest.approx(
+            m["swap_gather_s"] + m["swap_put_s"] + m["swap_scatter_s"])
+        # parked from dispatch: the 50 ms sleep is swapped-out time even
+        # though the async harvest only happened at the resume step
+        assert reqs[0].swapped_s >= 0.05
+        if async_paging:
+            assert m["swap_harvests_overlapped"] >= 1
+            assert m["swap_overlap_ratio"] > 0
+        else:
+            assert m["swap_harvests_overlapped"] == 0
+            assert m["swap_overlap_ratio"] == 0
+            assert m["swap_stall_s"] > 0
+
+
+def test_router_sums_swap_split_and_migration_waits_for_harvest():
+    """Router metrics sum the dispatch/stall split, and a swapped-state
+    migration force-harvests a still-draining gather so the record moves
+    with a complete in-memory image — restored bitwise on the taker."""
+    cfg, params = _model("gdn")
+    ref_eng = _engine("gdn", max_slots=1)
+    ref_req = Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                      max_new_tokens=12, temperature=0.8, top_k=10,
+                      top_p=0.9)
+    ref_eng.submit(ref_req)
+    ref_eng.run_until_done()
+
+    engs = [DecodeEngine(cfg, params, max_slots=1, max_len=64,
+                         decode_block=2, prefill_chunk=8,
+                         async_paging=True) for _ in range(2)]
+    router = Router(engs, policy="round_robin")
+    a = Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                max_new_tokens=12, temperature=0.8, top_k=10, top_p=0.9)
+    router.submit(a)
+    engs[0].step()
+    assert a.state == sched.ACTIVE
+    router.pause(0)
+    assert engs[0].swapped[0].phase == sched.DRAINING
+    router.resume(0)
+    # withdraw while the gather is STILL draining (no tick ran a harvest
+    # sweep in between): migration must force the harvest itself
+    assert engs[0].swapped[0].phase == sched.DRAINING
+    rec = engs[0].withdraw_swapped()
+    assert rec is not None
+    assert rec.pending is None and rec.prefetch is None     # harvested
+    assert isinstance(rec.state, SwappedState)
+    hog = Request(rid=10, prompt=np.arange(1, 9, dtype=np.int32),
+                  max_new_tokens=24)
+    engs[0].submit(hog)
+    engs[1].readmit_swapped(rec)
+    done = router.run_until_done()
+    assert {r.rid for r in done} == {0, 10}
+    assert list(a.output) == list(ref_req.output)
+    m = router.metrics()
+    assert m["swap_dispatch_s"] > 0
+    assert m["swap_s"] == pytest.approx(m["swap_dispatch_s"]
+                                        + m["swap_stall_s"])
+    assert (m["swap_harvests_overlapped"] + m["swap_harvests_forced"]
+            == m["swap_outs"])
+
+
+# -------------------------------------------------------- spill-to-disk
+
+def test_spill_lifecycle(tmp_path):
+    """Beyond the watermark the coldest dormant image spills to an .npz
+    under the spool dir (state leaves host memory), and resume reloads
+    it transparently — the stream is still bitwise the uninterrupted
+    one and the spool file is deleted."""
+    ref = _ref_streams("gdn", True)
+    spool = str(tmp_path / "spool")
+    eng = _engine("gdn", async_paging=True, swap_spool_dir=spool,
+                  host_swap_bytes=0)
+    reqs = _reqs(3, True)
+    for r in reqs:
+        eng.submit(r)
+    _step_until(eng, lambda: (reqs[0].state == sched.ACTIVE
+                              and len(reqs[0].output) >= 2))
+    eng.pause(0)
+    # dormant + over-watermark: the next tick harvests then spills
+    _step_until(eng, lambda: eng.swapped[0].phase == sched.SPILLED)
+    rec = eng.swapped[0]
+    assert rec.state is None and rec.pending is None
+    assert os.path.exists(rec.spool)
+    assert rec.spool.startswith(spool)
+    m = eng.metrics()
+    assert m["spills"] == 1 and m["spill_bytes"] > 0
+    assert m["host_swap_bytes_held"] == 0
+    eng.resume(0)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert _streams(reqs) == ref
+    m = eng.metrics()
+    assert m["spill_loads"] == 1
+    assert not os.listdir(spool)        # reload deleted the file
+
+
+def test_spill_validation_and_ring_validation():
+    cfg, params = _model("gdn")
+    with pytest.raises(ValueError, match="host_swap_bytes"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     host_swap_bytes=-1, swap_spool_dir="/tmp/x")
+    with pytest.raises(ValueError, match="swap_spool_dir"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     host_swap_bytes=1 << 20)
+    with pytest.raises(ValueError, match="gather_ring"):
+        DecodeEngine(cfg, params, max_slots=1, max_len=32,
+                     gather_ring=0)
