@@ -72,6 +72,17 @@ CPU-interpreter scale; only the trend is the claim):
    emitted token strictly lower; acceptance rate and tokens/s are
    reported for both engines.
 
+8. **disaggregated prefill/decode** — a mixed workload (long decode
+   sessions + a storm of long-prompt prefill-only requests) served by
+   two ``EngineWorker`` processes, once colocated (both workers serve
+   both roles) and once disaggregated (one prefill worker pauses every
+   request at the admit boundary and ships the swapped image to one
+   decode worker).  Long-session decode throughput is measured with and
+   without the concurrent storm; the storm-induced degradation is
+   asserted *strictly lower* disaggregated than colocated (decode ticks
+   never share an engine with prefill work), with all streams bitwise
+   identical to a single-engine reference.
+
 Each engine is built through ``make_engine``, which runs the warm-up
 pass so jit compilation stays out of the measurement
 (``reset_metrics``).  Run with ``--quick`` for the CI smoke
@@ -640,6 +651,132 @@ def run_spec_decode(quick: bool = False):
          f"bitwise_identical_streams")
 
 
+def _disagg_longs(n, max_new, rid0=0):
+    """Long decode sessions (short prompt, long budget), mixed
+    greedy/stochastic.  Streams depend only on (rid, sampler params,
+    engine seed) — identical across topologies and phases."""
+    return [Request(rid=rid0 + i, prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new_tokens=max_new,
+                    temperature=0.8 if i % 2 == 0 else 0.0,
+                    top_k=10 if i % 2 == 0 else 0,
+                    top_p=0.9 if i % 2 == 0 else 1.0)
+            for i in range(n)]
+
+
+def _disagg_storm(cfg, n, plen, rid0=1000):
+    """Prefill-only storm: long prompts with a 1-token budget — each
+    request completes at the admit boundary (its single token is the
+    fused admit sample), so it is pure staged-prefill load that never
+    takes a slot and never hands off."""
+    prompt = (np.arange(1, plen + 1) % (cfg.vocab - 2) + 1).astype(
+        np.int32)
+    return [Request(rid=rid0 + i, prompt=prompt, max_new_tokens=1)
+            for i in range(n)]
+
+
+def run_disagg(quick: bool = False):
+    """Disaggregated prefill/decode over worker processes vs colocated.
+
+    Two ``EngineWorker`` subprocesses behind the router, each with its
+    own interpreter and jax runtime.  Colocated: both workers serve
+    both roles, so every long decode session shares its engine's tick
+    loop with storm prefill chunks.  Disaggregated: the prefill worker
+    pauses every request at the admit boundary and the router ships the
+    swapped image to the decode worker — storm chunks and decode ticks
+    run in different processes.
+
+    Per topology: phase A serves the long sessions alone (baseline
+    throughput T0, mean per-request tokens/s over active time), phase B
+    serves the same sessions under a concurrent prefill storm (T1).
+    Degradation = T0/T1.  Asserted: every long-session stream (both
+    topologies, both phases) is bitwise the single-engine reference
+    stream; the prefill worker decodes zero tokens; disaggregated
+    degradation is strictly below colocated.  Reported: T0, T1,
+    degradation per topology and the colocated/disagg degradation
+    ratio."""
+    from repro.serving.engine import Router
+    from repro.serving.rpc import EngineProxy
+
+    arch = "qwen3-next-gdn"
+    cfg, params = arch_setup(arch)
+    n_long, max_new = (2, 24) if quick else (2, 48)
+    n_storm, plen = (6, 96) if quick else (12, 96)
+    kw = dict(max_slots=2, max_len=128, decode_block=2, prefill_chunk=8)
+
+    # single-engine colocated reference: the bitwise target
+    ref_eng = make_engine(cfg, params, **kw)
+    ref = _disagg_longs(n_long, max_new)
+    for r in ref:
+        ref_eng.submit(r)
+    ref_eng.run_until_done()
+    ref_streams = [list(r.output) for r in ref]
+
+    degradation = {}
+    for mode, roles in (("colocated", ("both", "both")),
+                        ("disagg", ("prefill", "decode"))):
+        engines = [EngineProxy(cfg, params_seed=0, role=role, **kw)
+                   for role in roles]
+        router = Router(engines)
+        # warm-up: compile every program the measured phases touch on
+        # every worker (long-session chunk plan + decode on both, the
+        # storm-length chunk plan on prefill-capable workers, and for
+        # disagg the handoff gather/restore-scatter pair)
+        warm = (_disagg_longs(2, 4, rid0=500)
+                + _disagg_storm(cfg, 2, plen, rid0=700))
+        for r in warm:
+            router.submit(r)
+        router.run_until_done()
+        router.reset_metrics()
+
+        streams = {}
+        tps = {}
+        for phase, stormy in (("unloaded", False), ("stormy", True)):
+            longs = _disagg_longs(n_long, max_new)
+            for r in longs:
+                router.submit(r)
+            storm = _disagg_storm(cfg, n_storm, plen) if stormy else []
+            for r in storm:
+                router.submit(r)
+            router.run_until_done()
+            assert all(r.done for r in longs + storm)
+            streams[phase] = [list(r.output) for r in longs]
+            assert streams[phase] == ref_streams, (
+                f"{mode}/{phase}: disaggregated serving must be "
+                f"bitwise: the handoff restores the exact admit-"
+                f"boundary image")
+            tps[phase] = float(np.mean([r.tokens_per_s for r in longs]))
+
+        m = router.metrics()
+        if mode == "disagg":
+            assert m["handoffs"] >= n_long * 2, (
+                f"disagg served {n_long * 2} long sessions but shipped "
+                f"only {m['handoffs']} handoffs")
+            assert m["per_engine"][0]["decoded_tokens"] == 0, (
+                "the prefill worker must never run a decode tick")
+        degradation[mode] = tps["unloaded"] / max(tps["stormy"], 1e-12)
+        emit(f"serving/{arch}/disagg_decode_degradation_{mode}",
+             degradation[mode],
+             f"unloaded_tokens_per_s={tps['unloaded']:.2f};"
+             f"stormy_tokens_per_s={tps['stormy']:.2f};"
+             f"workers=2;roles={','.join(roles)};"
+             f"long_sessions={n_long};storm={n_storm}x{plen}tok;"
+             f"handoffs={m['handoffs']};"
+             f"bitwise_vs_single_engine;reduced_cpu")
+        for e in engines:
+            e.shutdown()
+
+    assert degradation["disagg"] < degradation["colocated"], (
+        f"disaggregation must shield decode from prefill load: "
+        f"degradation {degradation['disagg']:.3f}x (disagg) >= "
+        f"{degradation['colocated']:.3f}x (colocated)")
+    emit(f"serving/{arch}/disagg_degradation_ratio",
+         degradation["colocated"] / max(degradation["disagg"], 1e-12),
+         f"colocated_over_disagg_decode_degradation;"
+         f"colocated={degradation['colocated']:.3f};"
+         f"disagg={degradation['disagg']:.3f};"
+         f"bitwise_identical_streams")
+
+
 SUBCOMMANDS = {
     "block_sweep": run_block_sweep,
     "ttft_under_load": run_ttft_under_load,
@@ -648,6 +785,7 @@ SUBCOMMANDS = {
     "oversubscribe": run_oversubscribe,
     "mesh_scaling": run_mesh_scaling,
     "spec_decode": run_spec_decode,
+    "disagg": run_disagg,
 }
 
 

@@ -37,6 +37,18 @@ against the target with the same per-slot sampler keys, and rejected
 positions roll the recurrent state back through a per-slot checkpoint
 buffer — token streams stay bitwise identical to non-speculative
 decode while each accepted run costs one host sync.
+``--adaptive-k-draft`` lets a windowed acceptance rate shrink/grow the
+effective draft length within [1, K] — a bad draft collapses to
+verify-heavy k=1 ticks instead of burning K rejected proposals per sync.
+
+``--rpc`` puts each engine in its own worker process
+(``repro.serving.rpc.EngineProxy`` over a framed pipe protocol);
+``--workers N`` is shorthand for ``--rpc --engines N``.  ``--roles``
+assigns per-engine roles for disaggregated serving, cycled over the
+engines (e.g. ``--roles prefill,decode``): prefill engines pause every
+request at the admit boundary and the router ships the swapped image to
+the least-loaded compatible decode engine — decode ticks never share an
+engine with prefill work, streams stay bitwise the colocated ones.
 """
 from __future__ import annotations
 
@@ -50,19 +62,65 @@ from repro import configs
 from repro.configs.base import ServingTopology
 from repro.launch import mesh as mesh_mod
 from repro.models import lm
-from repro.serving.engine import DecodeEngine, Request, Router
+from repro.serving.engine import DecodeEngine, EngineProxy, Request, Router
+
+
+def _roles(args):
+    """Per-engine roles, cycled over ``--roles`` (default: every engine
+    serves both prefill and decode)."""
+    roles = [r.strip() for r in (args.roles or "both").split(",")]
+    for r in roles:
+        if r not in ("prefill", "decode", "both"):
+            raise SystemExit(f"--roles: unknown role {r!r} "
+                             f"(prefill/decode/both)")
+    return [roles[i % len(roles)] for i in range(args.engines)]
 
 
 def build_engines(cfg, params, args, topo: ServingTopology):
     """One engine per ``--engines``, each on its own consecutive device
     slice when the backend has enough devices (otherwise they share the
-    first slice — correct, just not physically parallel)."""
+    first slice — correct, just not physically parallel).  With
+    ``--rpc`` each engine is an ``EngineProxy`` worker process instead
+    (its own interpreter and jax runtime — real process parallelism);
+    weights ship as the init seed, rebuilt bitwise-identically by each
+    worker."""
     slots = topo.pad_slots(args.slots)
     if slots != args.slots:
         print(f"slots padded {args.slots} -> {slots} "
               f"(multiple of data={topo.data})")
+    roles = _roles(args)
+    common = dict(
+        max_slots=slots, max_len=args.max_len,
+        seed=args.seed, decode_block=args.decode_block,
+        overlap=args.overlap, prefill_chunk=args.prefill_chunk,
+        budget_ticks=args.budget_ticks,
+        staging_depth=topo.staging_depth,
+        plan_mode=args.plan_mode,
+        prefill_batching=args.prefill_batching,
+        prefill_budget=args.prefill_budget,
+        swap_policy=args.swap_policy,
+        idle_swap_ms=args.idle_swap_ms,
+        max_live_requests=args.max_live_requests,
+        async_paging=args.async_paging,
+        gather_ring=args.gather_ring,
+        host_swap_bytes=args.host_swap_bytes,
+        swap_spool_dir=args.swap_spool_dir,
+        speculative=args.speculative,
+        draft_cfg=getattr(args, "_draft_cfg", None),
+        draft_params=getattr(args, "_draft_params", None),
+        k_draft=args.k_draft,
+        adaptive_k=args.adaptive_k)
     engines = []
     dm = topo.devices
+    if args.rpc:
+        mesh_shape = None if dm == 1 else topo.shape
+        for i in range(args.engines):
+            print(f"spawning worker {i} (role={roles[i]})...")
+            engines.append(EngineProxy(
+                cfg, params_seed=args.seed, role=roles[i],
+                mesh_shape=mesh_shape,
+                mesh_axes=topo.axes if mesh_shape else None, **common))
+        return engines, slots
     devs = jax.devices()
     shared_note = False
     for i in range(args.engines):
@@ -81,26 +139,8 @@ def build_engines(cfg, params, args, topo: ServingTopology):
                                      device_count=len(sl))
         mesh = (None if dm == 1 and args.engines == 1 else
                 jax.make_mesh(topo.shape, topo.axes, devices=sl))
-        engines.append(DecodeEngine(
-            cfg, params, max_slots=slots, max_len=args.max_len,
-            seed=args.seed, decode_block=args.decode_block,
-            overlap=args.overlap, prefill_chunk=args.prefill_chunk,
-            budget_ticks=args.budget_ticks, mesh=mesh,
-            staging_depth=topo.staging_depth,
-            plan_mode=args.plan_mode,
-            prefill_batching=args.prefill_batching,
-            prefill_budget=args.prefill_budget,
-            swap_policy=args.swap_policy,
-            idle_swap_ms=args.idle_swap_ms,
-            max_live_requests=args.max_live_requests,
-            async_paging=args.async_paging,
-            gather_ring=args.gather_ring,
-            host_swap_bytes=args.host_swap_bytes,
-            swap_spool_dir=args.swap_spool_dir,
-            speculative=args.speculative,
-            draft_cfg=getattr(args, "_draft_cfg", None),
-            draft_params=getattr(args, "_draft_params", None),
-            k_draft=args.k_draft))
+        engines.append(DecodeEngine(cfg, params, mesh=mesh,
+                                    role=roles[i], **common))
     return engines, slots
 
 
@@ -180,11 +220,22 @@ def main():
                          "spilling unless a spool dir is set, then 0 — "
                          "spill every dormant image)")
     ap.add_argument("--swap-spool-dir", default=None,
-                    help="directory for spilled .npz swap images "
+                    help="directory for spilled swap images (wire codec) "
                          "(spill-to-disk tier for truly cold sessions; "
                          "images reload transparently on resume)")
     ap.add_argument("--engines", type=int, default=1,
                     help="number of per-mesh engines behind the router")
+    ap.add_argument("--rpc", action="store_true", default=False,
+                    help="run each engine in its own worker process "
+                         "(EngineWorker subprocess behind an "
+                         "EngineProxy) instead of in-process")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="shorthand for --rpc --engines N")
+    ap.add_argument("--roles", default=None,
+                    help="comma list of per-engine roles cycled over the "
+                         "engines, e.g. 'prefill,decode' for "
+                         "disaggregated serving (default: every engine "
+                         "is 'both')")
     ap.add_argument("--router-policy", default="least_loaded",
                     choices=("least_loaded", "round_robin"))
     ap.add_argument("--serialized", dest="overlap", action="store_false",
@@ -213,6 +264,11 @@ def main():
                     help="draft tokens proposed per slot per "
                          "speculative tick (each tick emits 1..k+1 "
                          "tokens per slot on one host sync)")
+    ap.add_argument("--adaptive-k-draft", dest="adaptive_k",
+                    action="store_true", default=False,
+                    help="acceptance-adaptive draft length: a windowed "
+                         "acceptance rate shrinks/grows the effective k "
+                         "within [1, --k-draft]; streams unchanged")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="device top-k sampling (0 = disabled)")
@@ -222,6 +278,9 @@ def main():
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     args = ap.parse_args()
+    if args.workers is not None:
+        args.rpc = True
+        args.engines = args.workers
 
     topo = ServingTopology.parse(args.mesh,
                                  staging_depth=args.staging_depth)
@@ -244,21 +303,26 @@ def main():
     router = Router(engines, policy=args.router_policy)
     eng = engines[0]
     # per-slot budgets straight from the mixers' declarative cache specs
-    print(f"topology: {args.engines} engine(s) x mesh "
+    print(f"topology: {args.engines} "
+          f"{'worker process(es)' if args.rpc else 'engine(s)'} x mesh "
           f"data={topo.data},model={topo.model} "
           f"(staging ring depth {topo.staging_depth}, "
-          f"router={args.router_policy})")
-    print(f"engine: {slots} slots x "
-          f"(persistent state {eng.state_bytes_per_slot / 2**10:.1f} KiB"
-          f" + window/KV {eng.window_bytes_per_slot / 2**10:.1f} KiB)"
-          f" = {eng.cache_bytes / 2**20:.2f} MiB slot buffers, "
-          f"decode_block={args.decode_block}, "
-          f"prefill={'overlapped' if args.overlap else 'serialized'} "
-          f"chunks of {eng.prefill_chunk} ({eng.plan_mode} plans, "
-          f"{'batched' if eng.prefill_batching else 'per-prompt'} "
-          f"staging)")
-    if (args.swap_policy != "manual" or args.max_live_requests
-            or args.async_paging or args.swap_spool_dir):
+          f"router={args.router_policy}, "
+          f"roles={','.join(_roles(args))})")
+    if not args.rpc:
+        print(f"engine: {slots} slots x "
+              f"(persistent state "
+              f"{eng.state_bytes_per_slot / 2**10:.1f} KiB"
+              f" + window/KV {eng.window_bytes_per_slot / 2**10:.1f} KiB)"
+              f" = {eng.cache_bytes / 2**20:.2f} MiB slot buffers, "
+              f"decode_block={args.decode_block}, "
+              f"prefill={'overlapped' if args.overlap else 'serialized'} "
+              f"chunks of {eng.prefill_chunk} ({eng.plan_mode} plans, "
+              f"{'batched' if eng.prefill_batching else 'per-prompt'} "
+              f"staging)")
+    if not args.rpc and (args.swap_policy != "manual"
+                         or args.max_live_requests
+                         or args.async_paging or args.swap_spool_dir):
         print(f"paging: swap_policy={args.swap_policy}"
               + (f", idle lease {args.idle_swap_ms:.0f} ms"
                  if args.idle_swap_ms is not None else "")
@@ -271,7 +335,7 @@ def main():
                  if args.swap_spool_dir else "")
               + f" — {eng.executor.swap_bytes_per_slot / 2**10:.1f} "
               f"KiB/swap from cache_spec")
-    if args.speculative:
+    if args.speculative and not args.rpc:
         ex = eng.executor
         print(f"speculative: draft={args.draft_config}, "
               f"k_draft={args.k_draft} — per slot "
@@ -295,7 +359,9 @@ def main():
     print(f"served {m['requests']} requests, {m['tokens']} tokens in "
           f"{dt:.2f}s ({m['tokens'] / dt:.1f} tok/s) over "
           f"{m['ticks']} engine ticks "
-          f"(placed {m['placed']}, migrated {m['migrated']})")
+          f"(placed {m['placed']}, migrated {m['migrated']}"
+          + (f", {m['handoffs']} prefill→decode handoffs"
+             if m["handoffs"] else "") + ")")
     print(f"  decode: {m['decode_us_per_token']:.0f} us/token "
           f"({m['decoded_tokens']} tokens in {m['decode_s']:.2f}s, "
           f"one host sync per {args.decode_block} tokens, "
@@ -330,6 +396,9 @@ def main():
     for r in done[:4]:
         print(f"  req {r.rid}: ttft {r.ttft_s * 1e3:.1f} ms, "
               f"{len(r.output)} toks: {list(r.output)}")
+    if args.rpc:
+        for e in engines:
+            e.shutdown()
 
 
 if __name__ == "__main__":

@@ -18,7 +18,13 @@ The engine used to be one module; it is now two layers (see
 
 Above the engine, ``repro.serving.router.Router`` fronts one-or-more
 per-mesh engines (placement, swap-aware rebalance/drain, aggregated
-metrics).
+metrics).  Engines may live in **other processes**: an
+``repro.serving.rpc.EngineProxy`` speaks the same surface over a framed
+pipe protocol to an ``EngineWorker`` subprocess hosting its own
+``Scheduler``, and engines carry a ``role`` (``prefill``/``decode``/
+``both``) for disaggregated serving — prefill engines pause every
+request at the admit boundary and the router ships the swapped image to
+a decode engine (see ``docs/serving.md``).
 
 **Slot oversubscription** (state paging): the engine serves more live
 sessions than device slots.  ``pause(rid)`` gathers a request's whole
@@ -47,7 +53,7 @@ identical to the synchronous fallback (``async_paging=False``, the
 default).  ``metrics()`` splits ``swap_s`` into ``swap_dispatch_s`` /
 ``swap_stall_s`` plus gather/put/scatter and overlap-ratio breakdowns.
 Beyond a ``host_swap_bytes`` watermark of in-memory swapped images, the
-coldest dormant ``SwappedState`` spills to an ``.npz`` under
+coldest dormant ``SwappedState`` spills to a wire-encoded image under
 ``swap_spool_dir`` and reloads transparently on resume (spill-to-disk
 tier for truly cold sessions).  See ``docs/serving.md``.
 
@@ -100,6 +106,7 @@ exactly as any tensor-parallel serving stack does (see
 from __future__ import annotations
 
 from repro.serving.router import Router
+from repro.serving.rpc import EngineProxy, WorkerDied
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -107,4 +114,5 @@ class DecodeEngine(Scheduler):
     """Backwards-compatible façade over ``Scheduler`` + ``DeviceExecutor``."""
 
 
-__all__ = ["DecodeEngine", "Request", "Router"]
+__all__ = ["DecodeEngine", "EngineProxy", "Request", "Router",
+           "WorkerDied"]

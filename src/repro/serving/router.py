@@ -1,4 +1,4 @@
-"""Host-side router: one front door over one-or-more per-mesh engines.
+"""Host-side router: one front door over one-or-more serving engines.
 
 A single ``Scheduler``/``DecodeEngine`` owns one device mesh — one SPMD
 tick program over one set of slot buffers.  Scaling past a mesh (more
@@ -6,8 +6,10 @@ hosts, more device islands, heterogeneous topologies) is a *routing*
 problem, not a sharding problem: the ``Router`` fronts N engines, places
 each submitted request on one of them, ticks them all, and aggregates
 their metrics.  It never touches a device buffer and knows nothing about
-meshes — engines are opaque behind ``submit`` / ``step`` / ``withdraw``
-/ ``load``.
+meshes — engines are opaque behind a narrow surface (``submit`` /
+``step`` / ``withdraw`` / ``load`` / the count properties below), which
+an in-process ``Scheduler`` and a process-remote ``EngineProxy``
+(``repro.serving.rpc``) implement interchangeably.
 
 Placement policies:
   * ``round_robin``  — cycle over non-draining engines (uniform traffic);
@@ -32,6 +34,28 @@ staging layout, so its resume *claim* can migrate from a slot-full
 engine to one with idle capacity (same arch config + max_len) and be
 restored through the taker's own slot scatter, re-sharded to its mesh.
 
+**Disaggregated prefill/decode** (engine ``role``): new prompts place
+only on prefill-capable engines (role ``prefill`` or ``both``).  A
+``role="prefill"`` engine runs the staged prefill, pauses every request
+at the admit boundary and parks the swapped image on its handoff queue;
+the router's per-step handoff sweep ships each image to the
+least-loaded *compatible* decode-capable engine, which readmits it
+through the existing restore scatter — decode ticks never share an
+engine with prefill work, and streams stay bitwise-identical to the
+colocated path (the PR 7 swap guarantee).  ``pending`` counts
+undelivered handoffs so ``run_until_done`` never abandons one mid-ship.
+
+**Process-boundary engines**: ``EngineProxy`` engines tick in their own
+worker process.  ``step`` issues each proxy's tick without waiting
+(``step_begin``) and drains whatever replies have arrived, blocking
+only when no engine made progress — so a fast decode worker keeps
+ticking at its own pace while a prefill worker chews a long prompt.  A
+worker that dies mid-run (EOF/broken pipe on its RPC channel) is marked
+dead: its still-queued requests are re-homed to live compatible
+engines, requests past the queue (their state lived in the dead
+process) are marked ``"failed"``, and the router keeps serving on the
+survivors.
+
 Requests keep their original ``t_submit`` across migrations, so TTFT
 measures the client's wait, not the router's shuffling.
 """
@@ -40,6 +64,7 @@ from __future__ import annotations
 import warnings
 from typing import Dict, List, Sequence
 
+from repro.serving.rpc import WorkerDied
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -57,20 +82,47 @@ class Router:
         self.policy = policy
         self._rr = 0                               # round-robin cursor
         self._draining = set()                     # engine indices
+        self._dead = set()                         # dead worker indices
         self.placed = [0] * len(self.engines)      # submits per engine
         self.migrated = 0                          # rebalance moves
+        self.handoffs = 0                          # prefill→decode ships
+        self.rehomed = 0                           # dead-worker recoveries
+        roles = [self._role(e) for e in self.engines]
+        if any(r != "both" for r in roles):
+            if all(r == "decode" for r in roles):
+                raise ValueError("every engine is decode-role: nothing "
+                                 "can prefill a fresh prompt")
+            if ("prefill" in roles
+                    and not any(r in ("decode", "both") for r in roles)):
+                raise ValueError("prefill-role engines need at least one "
+                                 "decode-capable engine to hand off to")
 
     # --------------------------------------------------------- placement
+    @staticmethod
+    def _role(e) -> str:
+        return getattr(e, "role", "both")
+
     def _live(self) -> List[int]:
         live = [i for i in range(len(self.engines))
-                if i not in self._draining]
+                if i not in self._draining and i not in self._dead]
         if not live:
-            raise RuntimeError("all engines are draining; undrain one "
-                               "before submitting")
+            raise RuntimeError("all engines are draining or dead; "
+                               "undrain one before submitting")
         return live
 
+    def _prefill_capable(self) -> List[int]:
+        return [i for i in self._live()
+                if self._role(self.engines[i]) != "decode"]
+
+    def _decode_capable(self) -> List[int]:
+        return [i for i in self._live()
+                if self._role(self.engines[i]) != "prefill"]
+
     def _place(self) -> int:
-        live = self._live()
+        live = self._prefill_capable()
+        if not live:
+            raise RuntimeError("no live prefill-capable engine to place "
+                               "a fresh prompt on")
         if self.policy == "round_robin":
             idx = live[self._rr % len(live)]
             self._rr += 1
@@ -87,8 +139,7 @@ class Router:
     # ------------------------------------------------------ state paging
     def _owner(self, rid: int) -> int:
         for i, e in enumerate(self.engines):
-            if rid in e.swapped or any(r.rid == rid and not r.done
-                                       for r in e._all):
+            if i not in self._dead and e.owns(rid):
                 return i
         raise KeyError(f"no engine owns a live request with rid {rid}")
 
@@ -106,13 +157,6 @@ class Router:
         self.engines[self._owner(rid)].touch(rid)
 
     # --------------------------------------------------------- rebalance
-    def _idle_capacity(self, eng: Scheduler) -> int:
-        """Free slots not already claimed by the engine's own backlog
-        (queue, staging ring, or resume queue — a resuming request owns
-        the next freed slot just as surely as a staged-ready one)."""
-        return (len(eng.free) - len(eng.queue) - len(eng._stagings)
-                - len(eng.resume_q))
-
     def _compatible(self, a: int, b: int) -> bool:
         """A swapped image restores bitwise only onto an engine with the
         same arch config and context length (the cache leaves are sized
@@ -142,20 +186,22 @@ class Router:
         return True
 
     def rebalance(self) -> int:
-        """Move queued requests off shard-full engines onto idle ones.
-        Returns the number of migrations."""
+        """Move queued requests off shard-full engines onto idle ones
+        (prefill-capable only — a queued request still needs its prompt
+        run).  Returns the number of migrations."""
         moved = 0
         while True:
-            donors = [i for i in self._live()
-                      if self.engines[i].queue and not self.engines[i].free]
-            takers = [i for i in self._live()
-                      if self._idle_capacity(self.engines[i]) > 0]
+            capable = self._prefill_capable()
+            donors = [i for i in capable
+                      if self.engines[i].queue_len
+                      and not self.engines[i].free_slots]
+            takers = [i for i in capable
+                      if self.engines[i].idle_capacity > 0]
             if not donors or not takers:
                 return moved
-            donor = max(donors, key=lambda i: len(self.engines[i].queue))
+            donor = max(donors, key=lambda i: self.engines[i].queue_len)
             taker = min(takers,
-                        key=lambda i: (-self._idle_capacity(self.engines[i]),
-                                       i))
+                        key=lambda i: (-self.engines[i].idle_capacity, i))
             req = self.engines[donor].withdraw()
             if req is None:             # raced empty — nothing left to move
                 return moved
@@ -166,27 +212,26 @@ class Router:
 
     def rebalance_swapped(self) -> int:
         """Move resume-queue claims off slot-full engines onto
-        compatible engines with idle capacity.  Returns the number of
-        migrations.  Runs after ``rebalance`` at every multi-engine
-        step: without it a resumed session is pinned to the engine that
-        swapped it out even while a neighbor idles."""
+        compatible decode-capable engines with idle capacity.  Returns
+        the number of migrations.  Runs after ``rebalance`` at every
+        multi-engine step: without it a resumed session is pinned to the
+        engine that swapped it out even while a neighbor idles."""
         moved = 0
         while True:
             donors = [i for i in self._live()
-                      if self.engines[i].resume_q
-                      and not self.engines[i].free]
+                      if self.engines[i].resume_len
+                      and not self.engines[i].free_slots]
             if not donors:
                 return moved
             donor = max(donors,
-                        key=lambda i: len(self.engines[i].resume_q))
-            takers = [i for i in self._live()
-                      if self._idle_capacity(self.engines[i]) > 0
+                        key=lambda i: self.engines[i].resume_len)
+            takers = [i for i in self._decode_capable()
+                      if self.engines[i].idle_capacity > 0
                       and self._compatible(donor, i)]
             if not takers:
                 return moved
             taker = min(takers,
-                        key=lambda i: (-self._idle_capacity(self.engines[i]),
-                                       i))
+                        key=lambda i: (-self.engines[i].idle_capacity, i))
             rec = self.engines[donor].withdraw_swapped()
             if rec is None:             # raced empty
                 return moved
@@ -202,6 +247,48 @@ class Router:
             self.placed[donor] -= 1
             moved += 1
             self.migrated += 1
+
+    # ---------------------------------------------------------- handoffs
+    def dispatch_handoffs(self) -> int:
+        """Ship completed-prefill swap records from prefill-role engines
+        to the least-loaded compatible decode-capable engine, which
+        readmits each through its own restore scatter (resume queue →
+        slot grant).  Runs at every step; returns records shipped."""
+        moved = 0
+        for i in list(self._live()):
+            eng = self.engines[i]
+            if self._role(eng) != "prefill":
+                continue
+            while getattr(eng, "handoffs", 0) > 0:
+                takers = [j for j in self._decode_capable()
+                          if j != i and self._compatible(i, j)]
+                if not takers:
+                    warnings.warn(
+                        f"router: engine {i} holds handoffs but no "
+                        f"compatible decode-capable engine is live; "
+                        f"leaving them parked", RuntimeWarning)
+                    break
+                try:
+                    rec = eng.withdraw_handoff()
+                except WorkerDied:
+                    self._on_worker_death(i)
+                    break
+                if rec is None:
+                    break
+                taker = min(takers,
+                            key=lambda j: (self.engines[j].load, j))
+                try:
+                    self.engines[taker].readmit_swapped(rec)
+                except ValueError as e:
+                    eng.readmit_swapped(rec)    # degraded: decode at home
+                    warnings.warn(f"router: engine {taker} rejected "
+                                  f"handoff req {rec.req.rid} ({e})",
+                                  RuntimeWarning)
+                    break
+                self.placed[taker] += 1
+                self.handoffs += 1
+                moved += 1
+        return moved
 
     def drain(self, idx: int) -> int:
         """Stop placing on engine ``idx`` and migrate its queued requests
@@ -226,19 +313,116 @@ class Router:
     def undrain(self, idx: int):
         self._draining.discard(idx)
 
+    # ------------------------------------------------------- worker death
+    def _on_worker_death(self, idx: int):
+        """A worker process died (EOF/broken pipe on its RPC channel):
+        mark the engine dead, re-home its still-queued requests to live
+        compatible prefill-capable engines, and mark requests whose
+        state lived in the dead process (staging/active/swapped) as
+        ``"failed"`` — their device/host images are gone with it."""
+        if idx in self._dead:
+            return
+        self._dead.add(idx)
+        eng = self.engines[idx]
+        recover = getattr(eng, "recover_queued", None)
+        queued, lost = recover() if recover is not None else ([], [])
+        warnings.warn(
+            f"router: engine {idx} worker died — re-homing "
+            f"{len(queued)} queued request(s), {len(lost)} past-queue "
+            f"request(s) failed", RuntimeWarning)
+        for req in queued:
+            t_submit = req.t_submit
+            try:
+                takers = [j for j in self._prefill_capable()
+                          if self._compatible(idx, j)]
+            except RuntimeError:
+                takers = []
+            placed = False
+            for j in sorted(takers,
+                            key=lambda j: (self.engines[j].load, j)):
+                try:
+                    self.engines[j].submit(req)
+                except ValueError:
+                    continue
+                req.t_submit = t_submit
+                self.placed[j] += 1
+                self.rehomed += 1
+                placed = True
+                break
+            if not placed:
+                req.state = "failed"
+
+    def _busy(self, idx: int) -> bool:
+        e = self.engines[idx]
+        return e.load + getattr(e, "handoffs", 0) > 0
+
+    def _guard(self, idx: int, fn):
+        """Run ``fn(engine)``, converting a dead worker into a marked
+        engine instead of an exception."""
+        try:
+            return fn(self.engines[idx])
+        except WorkerDied:
+            self._on_worker_death(idx)
+            return None
+
     # -------------------------------------------------------------- tick
     @property
     def pending(self) -> int:
-        return sum(e.load for e in self.engines)
+        """Requests the router still owes work to, including
+        completed-prefill handoffs not yet delivered to a decode engine
+        (dormant user-paused sessions are excluded, as on the engine)."""
+        return sum(self.engines[i].load
+                   + getattr(self.engines[i], "handoffs", 0)
+                   for i in range(len(self.engines))
+                   if i not in self._dead)
 
     def step(self):
         """One router tick: rebalance backlog (queued, then resume
-        claims), then tick every engine."""
+        claims), tick every engine, then sweep handoffs.
+
+        Process-remote engines tick **pipelined**: every proxy's step is
+        issued up front without waiting (``step_begin``), local engines
+        tick while the workers chew, and whatever replies have arrived
+        are drained non-blocking — blocking only when nothing local ran
+        and no reply was ready (the loop must make progress).  A proxy
+        whose previous step is still in flight is simply skipped this
+        round: each worker ticks at its own pace instead of the fleet
+        marching in lockstep behind the slowest prefill."""
         if len(self.engines) > 1:
             self.rebalance()
             self.rebalance_swapped()
-        for eng in self.engines:
-            eng.step()
+        alive = [i for i in range(len(self.engines))
+                 if i not in self._dead]
+        proxies = [i for i in alive
+                   if hasattr(self.engines[i], "step_begin")]
+        locals_ = [i for i in alive if i not in proxies]
+        for i in proxies:
+            self._guard(i, lambda e: e.step_begin())
+        for i in locals_:
+            self.engines[i].step()
+        # progress = an engine that OWES work ticked; an idle worker's
+        # instant replies must not let run_until_done spin through its
+        # tick budget while a loaded worker is still chewing (e.g. the
+        # decode worker compiling its first restore scatter)
+        progressed = any(self._busy(i) for i in locals_)
+        for i in proxies:
+            if i in self._dead:
+                continue
+            busy = self._busy(i)
+            if self._guard(i, lambda e: e.step_drain(block=False)) \
+                    and busy:
+                progressed = True
+        if not progressed:
+            # block for one reply from a worker that owes work so the
+            # loop paces itself to the workers, not a spin
+            for i in proxies:
+                if i in self._dead or not self._busy(i):
+                    continue
+                if self._guard(i, lambda e: e.step_drain(block=True)):
+                    break
+        if any(self._role(self.engines[i]) == "prefill"
+               for i in range(len(self.engines)) if i not in self._dead):
+            self.dispatch_handoffs()
 
     def run_until_done(self, max_ticks: int = 10_000, *,
                        strict: bool = True) -> List[Request]:
@@ -246,6 +430,10 @@ class Router:
             if self.pending == 0:
                 break
             self.step()
+        for i in range(len(self.engines)):      # settle in-flight ticks
+            if i not in self._dead and hasattr(self.engines[i],
+                                               "step_drain"):
+                self._guard(i, lambda e: e.step_drain(block=True))
         if self.pending:
             msg = (f"Router.run_until_done: max_ticks={max_ticks} "
                    f"exhausted with {self.pending} request(s) unfinished "
@@ -253,18 +441,26 @@ class Router:
             if strict:
                 raise RuntimeError(msg)
             warnings.warn(msg, RuntimeWarning)
-        return [r for e in self.engines for r in e._all if r.done]
+        return [r for e in self.engines for r in e.done_requests()]
 
     # ----------------------------------------------------------- metrics
     def reset_metrics(self):
-        for eng in self.engines:
-            eng.reset_metrics()
+        for i, eng in enumerate(self.engines):
+            if i not in self._dead:
+                self._guard(i, lambda e: e.reset_metrics())
 
     def metrics(self) -> Dict[str, object]:
-        """Aggregate metrics over all engines: counters summed, per-request
-        means weighted by each engine's completed-request count, plus the
-        per-engine dicts and the router's own placement counters."""
-        per = [e.metrics() for e in self.engines]
+        """Aggregate metrics over all live engines: counters summed,
+        per-request means weighted by each engine's completed-request
+        count, plus the per-engine dicts and the router's own placement
+        counters."""
+        per = []
+        for i, eng in enumerate(self.engines):
+            if i in self._dead:
+                continue
+            m = self._guard(i, lambda e: e.metrics())
+            if m is not None:
+                per.append(m)
         n = [m["requests"] for m in per]
 
         def wmean(key):
@@ -278,6 +474,7 @@ class Router:
         return {
             "engines": len(self.engines),
             "policy": self.policy,
+            "roles": [self._role(e) for e in self.engines],
             "requests": sum(n),
             "tokens": sum(m["tokens"] for m in per),
             "ticks": sum(m["ticks"] for m in per),
@@ -309,6 +506,8 @@ class Router:
             "spills": sum(m["spills"] for m in per),
             "spill_loads": sum(m["spill_loads"] for m in per),
             "spill_bytes": sum(m["spill_bytes"] for m in per),
+            "handoffs_out": sum(m["handoffs_out"] for m in per),
+            "handoffs_pending": sum(m["handoffs"] for m in per),
             "speculative": int(all(m["speculative"] for m in per)),
             "spec_ticks": sum(m["spec_ticks"] for m in per),
             "drafted_tokens": sum(m["drafted_tokens"] for m in per),
@@ -324,6 +523,9 @@ class Router:
             "mean_tokens_per_s": wmean("mean_tokens_per_s"),
             "placed": list(self.placed),
             "migrated": self.migrated,
+            "handoffs": self.handoffs,
+            "rehomed": self.rehomed,
             "draining": sorted(self._draining),
+            "dead": sorted(self._dead),
             "per_engine": per,
         }

@@ -70,6 +70,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.serving import wire
 from repro.serving.executor import (DeviceExecutor, PendingSwap, PlanStep,
                                     SwappedState)
 
@@ -86,8 +87,8 @@ SWAPPED, RESUMING, DONE = "swapped", "resuming", "done"
 # lifecycle state stays SWAPPED or RESUMING — these describe where its
 # *image* is): DRAINING = gather dispatched, D2H still in flight;
 # HOSTED = image is host numpy; PREFETCHED = image prestaged back on
-# device awaiting a predicted grant; SPILLED = image is an .npz in the
-# spool dir
+# device awaiting a predicted grant; SPILLED = image is a wire-encoded
+# file in the spool dir
 DRAINING, HOSTED = "draining", "hosted"
 PREFETCHED, SPILLED = "prefetched", "spilled"
 
@@ -199,7 +200,7 @@ class _Swapped:
     holds the in-flight gather (DRAINING) until a harvest materializes
     ``state``; ``prefetch`` holds a device-resident restore triple
     (PREFETCHED) staged ahead of a predicted grant; ``spool`` points at
-    an on-disk .npz (SPILLED) once the host watermark pushed the image
+    an on-disk wire-encoded file (SPILLED) once the watermark pushed the image
     out of memory."""
     req: Request
     state: Optional[SwappedState]
@@ -207,7 +208,6 @@ class _Swapped:
     pending: Optional[PendingSwap] = None
     prefetch: Optional[tuple] = None
     spool: Optional[str] = None
-    spool_treedef: Any = None
 
     @property
     def phase(self) -> str:
@@ -237,7 +237,8 @@ class Scheduler:
                  host_swap_bytes: Optional[int] = None,
                  swap_spool_dir: Optional[str] = None,
                  speculative: bool = False, draft_cfg=None,
-                 draft_params=None, k_draft: int = 4):
+                 draft_params=None, k_draft: int = 4,
+                 adaptive_k: bool = False, role: str = "both"):
         if decode_block < 1:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
         if prefill_budget is not None and prefill_budget < 1:
@@ -266,6 +267,13 @@ class Scheduler:
                 and not speculative:
             raise ValueError("draft_cfg/draft_params given without "
                              "speculative=True")
+        if adaptive_k and not speculative:
+            raise ValueError("adaptive_k tunes the speculative draft "
+                             "length — set speculative=True")
+        if role not in ("prefill", "decode", "both"):
+            raise ValueError(f"role must be one of prefill/decode/both, "
+                             f"got {role!r}")
+        self.role = role
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -279,6 +287,14 @@ class Scheduler:
         # real deployments pass a trained smaller draft_cfg/draft_params)
         self.speculative = speculative
         self.k_draft = k_draft
+        # acceptance-adaptive draft length: a windowed acceptance rate
+        # shrinks/grows the effective k within [1, k_draft] — a bad
+        # draft model collapses to verify-heavy k=1 ticks instead of
+        # burning k rejected proposals per sync; streams are unaffected
+        # (the shared-key verify emits the same tokens at any k)
+        self.adaptive_k = bool(adaptive_k)
+        self._k_eff = k_draft
+        self._accept_window: Deque[tuple] = deque(maxlen=4)
         if speculative and draft_cfg is None:
             draft_cfg, draft_params = cfg, params
         self.executor = DeviceExecutor(
@@ -322,13 +338,19 @@ class Scheduler:
         self.swapped: Dict[int, _Swapped] = {}
         self.resume_q: Deque[int] = deque()
         self._grant_resume_next = True
+        # disaggregated serving: a role="prefill" engine pauses every
+        # request at the admit boundary (prompt fully prefilled, first
+        # token emitted, sampler row advanced) and parks the swap record
+        # here until the router ships it to a decode engine
+        self._handoff_q: Deque[int] = deque()
+        self.handoffs_out = 0       # records shipped via withdraw_handoff
         # async paging: rids whose gather is still draining D2H, in
         # dispatch order — the force-harvest order when the gather ring
         # runs out of buffers
         self.async_paging = bool(async_paging)
         self._draining_q: Deque[int] = deque()
         # spill-to-disk tier: beyond host_swap_bytes of in-memory swapped
-        # images, the coldest dormant image spills to an .npz under
+        # images, the coldest dormant image spills to a wire-encoded file under
         # swap_spool_dir (a spool dir with no watermark spills every
         # dormant image — watermark 0)
         self.host_swap_bytes = host_swap_bytes
@@ -434,6 +456,13 @@ class Scheduler:
 
     # ------------------------------------------------------------ submit
     def submit(self, req: Request):
+        # a decode-role engine never prefills: fresh prompts belong on a
+        # prefill/both engine — it only adopts admitted state through
+        # readmit_swapped (the prefill→decode handoff)
+        if getattr(self, "role", "both") == "decode":
+            raise ValueError(f"req {req.rid}: engine role is 'decode' — "
+                             f"it accepts handoff images "
+                             f"(readmit_swapped), not fresh prompts")
         # reject out-of-range sampling params up front: past this point the
         # host mirror and the device pipeline must behave identically
         if not 0.0 < req.top_p <= 1.0:
@@ -536,6 +565,33 @@ class Scheduler:
         del self._all[idx]
         return rec
 
+    def withdraw_handoff(self) -> Optional[_Swapped]:
+        """Remove and return the oldest completed-prefill swap record
+        awaiting dispatch to a decode engine, or None.  Only meaningful
+        on a ``role="prefill"`` engine — ``_swap_out_ready`` parks every
+        admit-boundary swap it makes on the handoff queue.  Like
+        ``withdraw_swapped``, the record leaves with a complete
+        in-memory image (a still-draining gather is force-harvested, a
+        spilled image reloaded); under async paging the D2H drain has
+        normally already overlapped the prefill ticks that followed the
+        swap-out, so the harvest here is a copy-out, not a stall."""
+        while self._handoff_q:
+            rid = self._handoff_q.popleft()
+            rec = self.swapped.pop(rid, None)
+            if rec is None:
+                continue            # withdrawn through another path
+            if rec.pending is not None:
+                self._harvest(rec, forced=not rec.pending.ready())
+            if rec.spool is not None:
+                self._load_spill(rec)
+            self._drop_prefetch(rec)
+            idx = next(i for i, r in enumerate(self._all)
+                       if r is rec.req)
+            del self._all[idx]
+            self.handoffs_out += 1
+            return rec
+        return None
+
     def readmit_swapped(self, rec: _Swapped):
         """Adopt a migrated swap record: the request joins this engine's
         resume queue and its image is restored through this engine's
@@ -557,6 +613,49 @@ class Scheduler:
         only host memory and are excluded."""
         return (len(self.active) + len(self.queue) + len(self._stagings)
                 + len(self.resume_q))
+
+    # ----------------------------------------------- router-facing surface
+    # Narrow read surface the Router uses instead of reaching into the
+    # engine's internals — an ``EngineProxy`` mirrors exactly these from
+    # its worker's status snapshots, so local engines and process-remote
+    # workers are interchangeable behind the router.
+    @property
+    def handoffs(self) -> int:
+        """Completed-prefill swap records awaiting handoff dispatch."""
+        return len(self._handoff_q)
+
+    @property
+    def queue_len(self) -> int:
+        return len(self.queue)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self.free)
+
+    @property
+    def staging_len(self) -> int:
+        return len(self._stagings)
+
+    @property
+    def resume_len(self) -> int:
+        return len(self.resume_q)
+
+    @property
+    def idle_capacity(self) -> int:
+        """Free slots not already claimed by the engine's own backlog
+        (queue, staging ring, or resume queue — a resuming request owns
+        the next freed slot just as surely as a staged-ready one)."""
+        return (self.free_slots - self.queue_len - self.staging_len
+                - self.resume_len)
+
+    def owns(self, rid: int) -> bool:
+        """True when a live (not done) request with ``rid`` is resident
+        here — queued, staging, active, resuming or swapped out."""
+        return rid in self.swapped or any(
+            r.rid == rid and not r.done for r in self._all)
+
+    def done_requests(self) -> List[Request]:
+        return [r for r in self._all if r.done]
 
     def _finished(self, req: Request, tok: int) -> bool:
         return (len(req.output) >= req.max_new_tokens
@@ -806,6 +905,11 @@ class Scheduler:
         if not self.async_paging:
             self._harvest(rec, forced=True)
         req.state = SWAPPED
+        if self.role == "prefill":
+            # disaggregation: every admit-boundary swap on a prefill
+            # engine is a finished prefill whose image belongs on a
+            # decode engine — park it for the router's handoff sweep
+            self._handoff_q.append(req.rid)
 
     def _swap_in(self, rid: int, slot: int):
         rec = self.swapped.pop(rid)
@@ -877,7 +981,7 @@ class Scheduler:
 
     # ---------------------------------------------------- spill-to-disk
     def _spill_path(self, rid: int) -> str:
-        return os.path.join(self.swap_spool_dir, f"swap-{rid}.npz")
+        return os.path.join(self.swap_spool_dir, f"swap-{rid}.state")
 
     def _apply_spill(self):
         """Push the coldest dormant images out to the spool dir until
@@ -898,34 +1002,25 @@ class Scheduler:
             self._spill(min(cold, key=lambda r: r.t_swap))
 
     def _spill(self, rec: _Swapped):
+        """Spool-tier writer: the on-disk image is the wire encoding
+        (``serving.wire`` — the SAME serializer the RPC migration path
+        uses), treedef included, so nothing about a spilled session
+        stays pinned in host memory."""
         os.makedirs(self.swap_spool_dir, exist_ok=True)
         path = self._spill_path(rec.req.rid)
-        leaves, treedef = jax.tree_util.tree_flatten(rec.state.caches)
-        np.savez(path, token=rec.state.token,
-                 **{f"cache_{i}": leaf for i, leaf in enumerate(leaves)},
-                 **{f"sampler_{k}": v
-                    for k, v in rec.state.sampler.items()})
+        wire.dump_swapped(path, rec.state)
         rec.spool = path
-        rec.spool_treedef = treedef     # structure stays in memory —
-        # the leaves are what cost bytes
         self.spills += 1
         self.spill_bytes += rec.state.nbytes
         rec.state = None
 
     def _load_spill(self, rec: _Swapped):
         """Transparent reload on resume: rebuild the ``SwappedState``
-        from the .npz and delete the spool file."""
-        with np.load(rec.spool) as z:
-            n = sum(1 for k in z.files if k.startswith("cache_"))
-            caches = jax.tree_util.tree_unflatten(
-                rec.spool_treedef, [z[f"cache_{i}"] for i in range(n)])
-            sampler = {k[len("sampler_"):]: z[k] for k in z.files
-                       if k.startswith("sampler_")}
-            rec.state = SwappedState(caches=caches, sampler=sampler,
-                                     token=z["token"])
+        from the spool file (bitwise — the wire codec frames every
+        array with its exact dtype/shape) and delete it."""
+        rec.state = wire.load_swapped(rec.spool)
         os.remove(rec.spool)
         rec.spool = None
-        rec.spool_treedef = None
         self.spill_loads += 1
 
     def _grant_resume(self) -> bool:
@@ -978,6 +1073,13 @@ class Scheduler:
     def _stage_start(self, req: Request):
         buf = self._free_bufs.popleft()
         req.state = STAGING
+        # prefill role: swap out at the admit boundary instead of holding
+        # the request staged-ready — the same pause-pending machinery a
+        # mid-prefill pause() uses, so the image is complete (prompt
+        # consumed, first token emitted, sampler row advanced) and the
+        # finished-at-admit check still completes EOS / 1-token requests
+        # in place, no handoff needed
+        handoff = self.role == "prefill"
         if self.executor.prefill_batching:
             # batched path: no fixed plan — the per-tick packer allocates
             # chunks; begin is host-only (rows are release-zeroed by the
@@ -987,7 +1089,8 @@ class Scheduler:
             tail = (T - 1) % C + 1
             self._stagings.append(_Staging(
                 req=req, plan=[], buf=buf,
-                chunks_left=(T - tail) // C, tail=tail))
+                chunks_left=(T - tail) // C, tail=tail,
+                pause_pending=handoff))
             self.executor.bstage_begin(
                 buf, seed=self.seed, rid=req.rid,
                 temperature=req.temperature, top_k=req.top_k,
@@ -996,7 +1099,7 @@ class Scheduler:
             return
         self._stagings.append(_Staging(
             req=req, plan=self.executor.plan_prefill(req.prompt_len),
-            buf=buf))
+            buf=buf, pause_pending=handoff))
         self.executor.stage_begin(
             buf, seed=self.seed, rid=req.rid, temperature=req.temperature,
             top_k=req.top_k, top_p=req.top_p, eos_id=req.eos_id,
@@ -1290,19 +1393,45 @@ class Scheduler:
 
     def _spec_k(self) -> int:
         """Budget-aware draft length: smallest power-of-two bucket (capped
-        at ``k_draft``) covering the largest remaining budget *minus the
-        verify's own guaranteed emission* — a slot with one token left
-        needs no draft at all (k = 0 is a verify-only 1-position tick)."""
+        at ``k_draft``, and at the acceptance-adapted effective k when
+        ``adaptive_k`` is on) covering the largest remaining budget
+        *minus the verify's own guaranteed emission* — a slot with one
+        token left needs no draft at all (k = 0 is a verify-only
+        1-position tick)."""
+        kmax = self._k_eff if self.adaptive_k else self.k_draft
         if not self.budget_ticks:
-            return self.k_draft
+            return kmax
         need = max(r.max_new_tokens - len(r.output)
                    for r in self.active.values())
         if need <= 1:
             return 0
         k = 1
-        while k < need - 1 and k < self.k_draft:
+        while k < need - 1 and k < kmax:
             k <<= 1
-        return min(k, self.k_draft)
+        return min(k, kmax)
+
+    def _adapt_k(self, accepted: int, drafted: int):
+        """Acceptance-adaptive draft length: over a short window of
+        draft-verify ticks, a collapsed acceptance rate halves the
+        effective k (floor 1 — a verify tick always emits its own
+        sample) and a high rate doubles it back (cap ``k_draft``).  Each
+        adjustment clears the window so the next decision is measured at
+        the new k.  Token streams are unaffected — the shared-key verify
+        emits the same tokens at any k; only the drafted-but-rejected
+        work per sync changes."""
+        self._accept_window.append((accepted, drafted))
+        if len(self._accept_window) < self._accept_window.maxlen:
+            return
+        d = sum(x[1] for x in self._accept_window)
+        if d == 0:
+            return
+        rate = sum(x[0] for x in self._accept_window) / d
+        if rate < 0.5 and self._k_eff > 1:
+            self._k_eff = max(1, self._k_eff // 2)
+            self._accept_window.clear()
+        elif rate > 0.8 and self._k_eff < self.k_draft:
+            self._k_eff = min(self.k_draft, self._k_eff * 2)
+            self._accept_window.clear()
 
     def _step_speculative(self):
         """One speculative engine tick, pipelined across the step
@@ -1323,6 +1452,7 @@ class Scheduler:
             self.ticks += 1
             self.spec_ticks += 1
             self.drafted_tokens += k * len(live)
+            tick_accepted = 0
             for slot, req in list(self.active.items()):
                 emitted = 0
                 for j in range(toks.shape[0]):
@@ -1341,7 +1471,10 @@ class Scheduler:
                         break
                 # every emission beyond the first rode on an accepted
                 # draft token (the first is the verify's own sample)
-                self.accepted_tokens += max(emitted - 1, 0)
+                tick_accepted += max(emitted - 1, 0)
+            self.accepted_tokens += tick_accepted
+            if self.adaptive_k and k > 0:
+                self._adapt_k(tick_accepted, k * len(live))
             if self._spec_deferred:
                 deferred, self._spec_deferred = self._spec_deferred, []
                 for rid, res in deferred:
@@ -1470,6 +1603,7 @@ class Scheduler:
         self.drafted_tokens = 0
         self.accepted_tokens = 0
         self.draft_prefills = 0
+        self.handoffs_out = 0
         self._metrics_seen = {id(r) for r in self._all if r.done}
 
     def metrics(self) -> Dict[str, float]:
@@ -1533,8 +1667,15 @@ class Scheduler:
             "host_swap_bytes_held": sum(
                 r.state.nbytes for r in self.swapped.values()
                 if r.state is not None),
+            "role": self.role,
+            "handoffs": len(self._handoff_q),
+            "handoffs_out": self.handoffs_out,
             "speculative": int(self.speculative),
             "k_draft": self.k_draft if self.speculative else 0,
+            "adaptive_k": int(self.adaptive_k),
+            "k_draft_effective":
+                (self._k_eff if self.speculative and self.adaptive_k
+                 else (self.k_draft if self.speculative else 0)),
             "spec_ticks": self.spec_ticks,
             "drafted_tokens": self.drafted_tokens,
             "accepted_tokens": self.accepted_tokens,

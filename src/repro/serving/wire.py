@@ -1,0 +1,320 @@
+"""Wire codec for the serving stack's host-boundary images.
+
+One serializer for every path that moves a request's state across a
+process or storage boundary:
+
+  * the RPC protocol between a ``Router``-side ``EngineProxy`` and its
+    ``EngineWorker`` subprocess (``repro.serving.rpc``) — submits,
+    swapped-image migrations and prefill→decode handoffs all ship
+    through ``encode``/``decode``;
+  * the spill-to-disk spool tier of async state paging
+    (``Scheduler._spill`` / ``_load_spill``) — the on-disk image is the
+    same bytes the RPC path would send, so a spooled session could in
+    principle be reloaded by any compatible engine, local or remote.
+
+The format is a tiny tagged binary encoding (length-prefixed fields, no
+schema negotiation — both ends are this codebase).  The load-bearing
+property is **bitwise round-trip of numpy leaves**: arrays are framed
+with ``np.lib.format`` (the ``.npy`` encoding), which preserves dtype,
+shape and byte order exactly — a ``SwappedState`` decoded on the far
+side restores through the slot scatter bitwise-identically to the
+local image (the PR 7 guarantee, extended across the process boundary).
+Container structure (the cache pytree's treedef) rides along via
+pickle — acceptable because every participant runs the same code; the
+arrays themselves are NEVER pickled (``allow_pickle=False``).
+
+Framing: ``write_frame``/``read_frame`` length-prefix each message with
+8 big-endian bytes for the pipe/socket protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import pickle
+import struct
+from typing import Any, BinaryIO, Dict
+
+import numpy as np
+
+# field tags — one byte each
+_T_NONE = b"N"
+_T_TRUE = b"T"
+_T_FALSE = b"F"
+_T_INT = b"i"
+_T_FLOAT = b"f"
+_T_STR = b"s"
+_T_BYTES = b"b"
+_T_LIST = b"l"
+_T_TUPLE = b"t"
+_T_DICT = b"d"
+_T_NDARRAY = b"a"
+_T_PICKLE = b"p"        # structure-only fallback (treedefs, configs) —
+                        # never used for array payloads
+
+_LEN = struct.Struct(">Q")
+_I64 = struct.Struct(">q")
+_F64 = struct.Struct(">d")
+
+
+# ------------------------------------------------------------ encoding
+def _enc(out: io.BytesIO, obj: Any):
+    if obj is None:
+        out.write(_T_NONE)
+    elif obj is True:
+        out.write(_T_TRUE)
+    elif obj is False:
+        out.write(_T_FALSE)
+    elif isinstance(obj, (int, np.integer)):
+        out.write(_T_INT)
+        out.write(_I64.pack(int(obj)))
+    elif isinstance(obj, (float, np.floating)):
+        out.write(_T_FLOAT)
+        out.write(_F64.pack(float(obj)))
+    elif isinstance(obj, str):
+        raw = obj.encode("utf-8")
+        out.write(_T_STR)
+        out.write(_LEN.pack(len(raw)))
+        out.write(raw)
+    elif isinstance(obj, (bytes, bytearray)):
+        out.write(_T_BYTES)
+        out.write(_LEN.pack(len(obj)))
+        out.write(bytes(obj))
+    elif isinstance(obj, np.ndarray):
+        if obj.dtype == object:
+            raise TypeError("wire: refusing to encode an object-dtype "
+                            "array (no bitwise representation)")
+        out.write(_T_NDARRAY)
+        bio = io.BytesIO()
+        # NB: np.ascontiguousarray promotes 0-d to 1-d; guard on the
+        # flag so scalar arrays keep their shape across the wire.
+        arr = obj if obj.flags.c_contiguous else np.ascontiguousarray(obj)
+        np.lib.format.write_array(bio, arr, allow_pickle=False)
+        raw = bio.getvalue()
+        out.write(_LEN.pack(len(raw)))
+        out.write(raw)
+    elif isinstance(obj, list):
+        out.write(_T_LIST)
+        out.write(_LEN.pack(len(obj)))
+        for x in obj:
+            _enc(out, x)
+    elif isinstance(obj, tuple):
+        out.write(_T_TUPLE)
+        out.write(_LEN.pack(len(obj)))
+        for x in obj:
+            _enc(out, x)
+    elif isinstance(obj, dict):
+        out.write(_T_DICT)
+        out.write(_LEN.pack(len(obj)))
+        for k, v in obj.items():
+            _enc(out, k)
+            _enc(out, v)
+    else:
+        # structure-only fallback: pytree treedefs, ArchConfig — small,
+        # same codebase on both sides of the pipe
+        raw = pickle.dumps(obj, protocol=4)
+        out.write(_T_PICKLE)
+        out.write(_LEN.pack(len(raw)))
+        out.write(raw)
+
+
+def encode(obj: Any) -> bytes:
+    """Serialize ``obj`` (numbers, strings, bytes, lists/tuples/dicts,
+    numpy arrays — arrays bitwise via the .npy encoding)."""
+    out = io.BytesIO()
+    _enc(out, obj)
+    return out.getvalue()
+
+
+# ------------------------------------------------------------ decoding
+def _read(buf: io.BytesIO, n: int) -> bytes:
+    raw = buf.read(n)
+    if len(raw) != n:
+        raise EOFError(f"wire: truncated field (wanted {n} bytes, got "
+                       f"{len(raw)})")
+    return raw
+
+
+def _dec(buf: io.BytesIO) -> Any:
+    tag = _read(buf, 1)
+    if tag == _T_NONE:
+        return None
+    if tag == _T_TRUE:
+        return True
+    if tag == _T_FALSE:
+        return False
+    if tag == _T_INT:
+        return _I64.unpack(_read(buf, 8))[0]
+    if tag == _T_FLOAT:
+        return _F64.unpack(_read(buf, 8))[0]
+    if tag == _T_STR:
+        n = _LEN.unpack(_read(buf, 8))[0]
+        return _read(buf, n).decode("utf-8")
+    if tag == _T_BYTES:
+        n = _LEN.unpack(_read(buf, 8))[0]
+        return _read(buf, n)
+    if tag == _T_NDARRAY:
+        n = _LEN.unpack(_read(buf, 8))[0]
+        return np.lib.format.read_array(io.BytesIO(_read(buf, n)),
+                                        allow_pickle=False)
+    if tag == _T_LIST:
+        n = _LEN.unpack(_read(buf, 8))[0]
+        return [_dec(buf) for _ in range(n)]
+    if tag == _T_TUPLE:
+        n = _LEN.unpack(_read(buf, 8))[0]
+        return tuple(_dec(buf) for _ in range(n))
+    if tag == _T_DICT:
+        n = _LEN.unpack(_read(buf, 8))[0]
+        return {_dec(buf): _dec(buf) for _ in range(n)}
+    if tag == _T_PICKLE:
+        n = _LEN.unpack(_read(buf, 8))[0]
+        return pickle.loads(_read(buf, n))
+    raise ValueError(f"wire: unknown tag {tag!r}")
+
+
+def decode(raw: bytes) -> Any:
+    return _dec(io.BytesIO(raw))
+
+
+# ------------------------------------------------------------- framing
+def write_frame(f: BinaryIO, payload: bytes):
+    """Length-prefixed frame: 8 big-endian length bytes + payload."""
+    f.write(_LEN.pack(len(payload)))
+    f.write(payload)
+    f.flush()
+
+
+def read_frame(f: BinaryIO) -> bytes:
+    """Read one frame; raises EOFError on a closed/truncated stream
+    (the proxy's worker-death signal)."""
+    head = f.read(8)
+    if len(head) != 8:
+        raise EOFError("wire: stream closed mid-header"
+                       if head else "wire: stream closed")
+    n = _LEN.unpack(head)[0]
+    chunks, got = [], 0
+    while got < n:
+        chunk = f.read(n - got)
+        if not chunk:
+            raise EOFError(f"wire: stream closed mid-frame "
+                           f"({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+# ----------------------------------------------------- SwappedState ⇄ bytes
+def _np_tree(tree):
+    """Materialize every leaf as host numpy (device_get for jax arrays;
+    a no-op for arrays already on host)."""
+    import jax
+    return jax.tree.map(np.asarray, jax.device_get(tree))
+
+
+def encode_swapped(sw) -> bytes:
+    """``SwappedState`` → bytes: cache leaves + pickled treedef +
+    sampler row + last token, every array framed bitwise."""
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(sw.caches)
+    return encode({
+        "treedef": treedef,
+        "leaves": [np.asarray(x) for x in jax.device_get(leaves)],
+        "sampler": {k: np.asarray(v)
+                    for k, v in _np_tree(sw.sampler).items()},
+        "token": np.asarray(jax.device_get(sw.token)),
+    })
+
+
+def decode_swapped(raw: bytes):
+    import jax
+    from repro.serving.executor import SwappedState
+    d = decode(raw)
+    caches = jax.tree_util.tree_unflatten(d["treedef"], d["leaves"])
+    return SwappedState(caches=caches, sampler=d["sampler"],
+                        token=d["token"])
+
+
+def dump_swapped(path: str, sw):
+    """Spool-tier writer: the on-disk spill image is the wire encoding
+    (one serializer for RPC and disk — the treedef travels WITH the
+    leaves, so nothing about the image stays pinned in host memory)."""
+    with open(path, "wb") as f:
+        f.write(encode_swapped(sw))
+
+
+def load_swapped(path: str):
+    with open(path, "rb") as f:
+        return decode_swapped(f.read())
+
+
+# ---------------------------------------------------------- Request ⇄ bytes
+def encode_request(req) -> bytes:
+    """``Request`` → bytes, field-complete: prompt arrays bitwise,
+    wall-clock stamps verbatim (``perf_counter`` is CLOCK_MONOTONIC on
+    Linux — comparable across processes on one host, so TTFT spans a
+    cross-worker handoff correctly)."""
+    d = {}
+    for f in dataclasses.fields(req):
+        v = getattr(req, f.name)
+        if isinstance(v, np.ndarray):
+            v = np.asarray(v)
+        d[f.name] = v
+    return encode(d)
+
+
+def decode_request(raw: bytes):
+    from repro.serving.scheduler import Request
+    d = decode(raw)
+    d["output"] = list(d.get("output") or [])
+    return Request(**d)
+
+
+# ------------------------------------------------------ swap record ⇄ bytes
+def encode_swap_record(rec) -> bytes:
+    """A scheduler ``_Swapped`` record (request + harvested host image +
+    swap stamp) → bytes — the unit the router migrates between engines
+    and the prefill→decode handoff ships.  The record must be fully
+    harvested (no pending drain / prefetch / spool) — ``withdraw_swapped``
+    and ``withdraw_handoff`` guarantee that."""
+    if rec.pending is not None or rec.prefetch is not None \
+            or rec.spool is not None:
+        raise ValueError("wire: swap record must be fully harvested "
+                         "before it crosses the process boundary")
+    return encode({
+        "req": encode_request(rec.req),
+        "state": (encode_swapped(rec.state)
+                  if rec.state is not None else None),
+        "t_swap": rec.t_swap,
+    })
+
+
+def decode_swap_record(raw: bytes):
+    from repro.serving.scheduler import _Swapped
+    d = decode(raw)
+    return _Swapped(
+        req=decode_request(d["req"]),
+        state=(decode_swapped(d["state"])
+               if d["state"] is not None else None),
+        t_swap=d["t_swap"])
+
+
+REQUEST_SYNC_FIELDS = (
+    "output", "done", "state", "t_submit", "t_first", "t_done",
+    "swapped_s", "_swapped_pre_first_s", "t_last_activity", "_t_active",
+)
+
+
+def request_update(req) -> Dict[str, Any]:
+    """The mutable-progress slice of a ``Request`` — what an
+    ``EngineWorker`` streams back so the caller's own object (held
+    across the process boundary by the proxy's mirror) stays live."""
+    u = {"rid": req.rid}
+    for k in REQUEST_SYNC_FIELDS:
+        v = getattr(req, k)
+        u[k] = list(v) if k == "output" else v
+    return u
+
+
+def apply_request_update(req, u: Dict[str, Any]):
+    for k in REQUEST_SYNC_FIELDS:
+        v = u[k]
+        setattr(req, k, list(v) if k == "output" else v)

@@ -1,0 +1,9 @@
+import pytest  # noqa: F401
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "subprocess: spawns EngineWorker subprocesses (each builds its "
+        "own jax runtime — the multiprocess disagg smoke; select with "
+        "-m subprocess)")

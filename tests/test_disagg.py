@@ -1,0 +1,451 @@
+"""Disaggregated prefill/decode serving: process-boundary engines,
+the wire codec, role-split handoffs, worker-death recovery and the
+acceptance-adaptive speculative draft length.
+
+The paper's capacity argument gives decode a dedicated datapath;
+LoopLynx (PAPERS.md) scales it across devices with a spatial–temporal
+split.  The serving analog pinned here: the engine boundary can be a
+*process* boundary (``EngineWorker`` subprocess behind an
+``EngineProxy``), engines specialize by role (``prefill`` engines pause
+every request at the admit boundary; the router ships the swapped image
+to a ``decode`` engine), and none of it may change a token:
+
+  * the wire codec round-trips every mixer kind's ``SwappedState``
+    bitwise (dtype, shape, treedef), plus ``Request`` and the framed
+    pipe protocol — one serializer for RPC and the spill-to-disk spool;
+  * disaggregated streams (prefill engine → handoff → decode engine)
+    are bitwise the single-engine colocated streams for all five mixer
+    kinds, greedy AND stochastic, including a request that finishes at
+    the admit boundary and never hands off;
+  * the same holds across real worker processes, with timing stamps
+    (TTFT/latency) surviving the cross-process handoff;
+  * a worker killed mid-run is detected (EOF on its channel), marked
+    dead, and its still-queued requests re-home to live compatible
+    engines and finish;
+  * role/lifecycle errors: decode-role engines reject fresh prompts,
+    all-decode router topologies are rejected, adaptive_k requires
+    speculative;
+  * acceptance-adaptive k_draft: self-draft (acceptance ~1) keeps the
+    effective k at k_draft; an adversarial random-weights draft
+    collapses it to 1 — with streams identical either way (the
+    shared-key verify emits the same tokens at any k).
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serving import wire
+from repro.serving.engine import (DecodeEngine, EngineProxy, Request,
+                                  Router, WorkerDied)
+from repro.serving.executor import SwappedState
+from repro.serving.scheduler import _Swapped
+
+ARCHS = {
+    "gdn": "qwen3-next-gdn",
+    "ssm": "mamba2-1.3b",
+    "rglru": "recurrentgemma-2b",
+    "attn": "yi-9b",
+    "swa": "h2o-danube-1.8b",
+}
+KINDS = list(ARCHS)
+
+_MODELS = {}
+
+
+def _model(kind):
+    if kind not in _MODELS:
+        cfg = configs.get_arch(ARCHS[kind]).reduced()
+        if os.environ.get("REPRO_PALLAS_SERVING") == "1":
+            cfg = cfg.replace(use_pallas_serving=True)
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        _MODELS[kind] = (cfg, params)
+    return _MODELS[kind]
+
+
+def _engine(kind, **kw):
+    cfg, params = _model(kind)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("decode_block", 2)
+    kw.setdefault("prefill_chunk", 8)
+    return DecodeEngine(cfg, params, **kw)
+
+
+def _reqs(n, max_new=8):
+    """Mixed greedy/stochastic sessions plus one admit-boundary
+    finisher (max_new_tokens=1 completes on the prefill engine and must
+    never hand off)."""
+    out = [Request(rid=i, prompt=np.arange(1, 7 + 3 * i, dtype=np.int32),
+                   max_new_tokens=max_new + i,
+                   temperature=0.8 if i % 2 == 0 else 0.0,
+                   top_k=10 if i % 2 == 0 else 0,
+                   top_p=0.9 if i % 2 == 0 else 1.0)
+           for i in range(n)]
+    out.append(Request(rid=n, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=1))
+    return out
+
+
+def _streams(reqs):
+    return [list(r.output) for r in reqs]
+
+
+_REF = {}
+
+
+def _ref_streams(kind):
+    """Single-engine colocated reference streams for ``_reqs(3)``."""
+    if kind not in _REF:
+        eng = _engine(kind)
+        reqs = _reqs(3)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        _REF[kind] = _streams(reqs)
+    return _REF[kind]
+
+
+# ======================================================================
+# wire codec
+# ======================================================================
+def test_wire_scalars_containers_roundtrip():
+    vals = [None, True, False, 0, -1, 2**40, 3.5, "héllo", b"\x00\xff",
+            [1, "a", None], (2.5, (None,)), {"k": [1, 2], 3: "v"},
+            {"nested": {"deep": (b"x", [True])}}]
+    for v in vals:
+        assert wire.decode(wire.encode(v)) == v
+    # tuples and lists stay distinct
+    assert isinstance(wire.decode(wire.encode((1, 2))), tuple)
+    assert isinstance(wire.decode(wire.encode([1, 2])), list)
+    # numpy scalar coercion
+    assert wire.decode(wire.encode(np.int64(7))) == 7
+    assert wire.decode(wire.encode(np.float32(0.5))) == 0.5
+
+
+def test_wire_ndarray_bitwise():
+    rng = np.random.default_rng(0)
+    for arr in (rng.standard_normal((3, 5)).astype(np.float32),
+                rng.standard_normal(7).astype(np.float64),
+                rng.integers(0, 2**31, (2, 2)).astype(np.int32),
+                rng.integers(0, 2**32, (1, 2)).astype(np.uint32),
+                np.array([], dtype=np.float32),
+                np.asarray(np.float16(1.5))):
+        back = wire.decode(wire.encode(arr))
+        assert back.dtype == arr.dtype and back.shape == arr.shape
+        assert back.tobytes() == arr.tobytes()
+    with pytest.raises(TypeError):
+        wire.encode(np.array([object()], dtype=object))
+
+
+def test_wire_frame_eof(tmp_path):
+    p = tmp_path / "frames.bin"
+    with open(p, "wb") as f:
+        wire.write_frame(f, b"hello")
+        wire.write_frame(f, b"")
+    with open(p, "rb") as f:
+        assert wire.read_frame(f) == b"hello"
+        assert wire.read_frame(f) == b""
+        with pytest.raises(EOFError):
+            wire.read_frame(f)
+    with open(p, "wb") as f:       # truncated payload
+        f.write((99).to_bytes(8, "big") + b"short")
+    with open(p, "rb") as f:
+        with pytest.raises(EOFError):
+            wire.read_frame(f)
+
+
+def test_wire_request_roundtrip():
+    req = Request(rid=42, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=7, temperature=0.8, top_k=10,
+                  top_p=0.9, eos_id=3, priority=2,
+                  output=[1, 2, 3], state="queued", t_submit=123.5)
+    back = wire.decode_request(wire.encode_request(req))
+    for f in dataclasses.fields(req):
+        a, b = getattr(back, f.name), getattr(req, f.name)
+        if isinstance(b, np.ndarray):
+            assert a.dtype == b.dtype and np.array_equal(a, b), f.name
+        else:
+            assert a == b or (a is None and b is None), f.name
+    assert back.prompt.dtype == req.prompt.dtype
+
+
+def test_wire_request_update_applies_progress():
+    a = Request(rid=1, prompt=np.arange(4, dtype=np.int32))
+    b = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                output=[5, 6], done=True, state="done",
+                t_submit=1.0, t_first=1.5, t_done=2.0, swapped_s=0.25)
+    wire.apply_request_update(a, wire.request_update(b))
+    for k in wire.REQUEST_SYNC_FIELDS:
+        assert getattr(a, k) == getattr(b, k), k
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_wire_swapped_state_bitwise(kind, tmp_path):
+    """Per mixer kind: a synthetic SwappedState with every cache leaf
+    randomly filled round-trips bitwise through the codec AND the
+    on-disk spool image — dtypes, shapes and the pytree treedef exact.
+    Built from ``cache_specs`` directly: no engine, no compile."""
+    cfg, _ = _model(kind)
+    spec = lm.cache_specs(cfg, 1, 64)
+    rng = np.random.default_rng(hash(kind) % 2**31)
+
+    def fill(leaf):
+        x = np.asarray(leaf)
+        if np.issubdtype(x.dtype, np.floating):
+            return rng.standard_normal(x.shape).astype(x.dtype)
+        return rng.integers(0, 100, x.shape).astype(x.dtype)
+
+    caches = jax.tree.map(fill, jax.device_get(spec.zeros()))
+    sampler = {"key": rng.integers(0, 2**32, (1, 2)).astype(np.uint32),
+               "temperature": np.array([0.8], np.float32),
+               "top_k": np.array([10], np.int32),
+               "top_p": np.array([0.9], np.float32),
+               "eos_id": np.array([-1], np.int32),
+               "remaining": np.array([5], np.int32),
+               "done": np.array([False])}
+    sw = SwappedState(caches=caches, sampler=sampler,
+                      token=np.array([[7]], np.int32))
+
+    for back in (wire.decode_swapped(wire.encode_swapped(sw)),
+                 _spool_roundtrip(tmp_path, kind, sw)):
+        assert (jax.tree_util.tree_structure(back.caches)
+                == jax.tree_util.tree_structure(caches))
+        for got, want in zip(jax.tree_util.tree_leaves(back.caches),
+                             jax.tree_util.tree_leaves(caches)):
+            assert got.dtype == want.dtype and got.shape == want.shape
+            assert np.array_equal(got, want), f"{kind}: leaf diverged"
+        for k in sampler:
+            assert np.array_equal(back.sampler[k], sampler[k]), k
+            assert back.sampler[k].dtype == sampler[k].dtype, k
+        assert np.array_equal(back.token, sw.token)
+
+
+def _spool_roundtrip(tmp_path, kind, sw):
+    path = str(tmp_path / f"swap-{kind}.state")
+    wire.dump_swapped(path, sw)
+    return wire.load_swapped(path)
+
+
+def test_wire_swap_record_rejects_unharvested():
+    req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
+    rec = _Swapped(req=req, state=None, t_swap=1.0, pending=object())
+    with pytest.raises(ValueError, match="harvested"):
+        wire.encode_swap_record(rec)
+
+
+# ======================================================================
+# role lifecycle errors
+# ======================================================================
+def test_decode_role_rejects_fresh_prompts():
+    eng = _engine("gdn", role="decode")
+    with pytest.raises(ValueError, match="decode"):
+        eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32)))
+
+
+def test_bad_role_topologies_rejected():
+    with pytest.raises(ValueError, match="role must be"):
+        _engine("gdn", role="verifier")
+    dec = _engine("gdn", role="decode")
+    with pytest.raises(ValueError, match="decode-role"):
+        Router([dec])
+    pre = _engine("gdn", role="prefill")
+    with pytest.raises(ValueError, match="decode-capable"):
+        Router([pre])
+    with pytest.raises(ValueError, match="speculative"):
+        _engine("gdn", adaptive_k=True)
+
+
+# ======================================================================
+# in-process disaggregation: bitwise per mixer kind
+# ======================================================================
+@pytest.mark.parametrize("kind", KINDS)
+def test_disagg_streams_bitwise(kind):
+    """Prefill engine → admit-boundary pause → router handoff → decode
+    engine restore must be bitwise the colocated single-engine streams,
+    greedy and stochastic, for every mixer kind.  The admit-boundary
+    finisher (max_new_tokens=1) completes on the prefill engine without
+    a handoff; the prefill engine never runs a decode tick."""
+    pre = _engine(kind, role="prefill")
+    dec = _engine(kind, role="decode")
+    router = Router([pre, dec])
+    reqs = _reqs(3)
+    for r in reqs:
+        router.submit(r)
+    done = router.run_until_done()
+    assert all(r.done for r in reqs)
+    assert len(done) == len(reqs)
+    assert _streams(reqs) == _ref_streams(kind)
+    m = router.metrics()
+    assert m["handoffs"] == 3           # the 1-token req never ships
+    assert m["handoffs_out"] == 3
+    assert m["per_engine"][0]["decoded_tokens"] == 0
+    assert m["per_engine"][1]["decoded_tokens"] > 0
+    # parked time at the handoff is excluded from throughput/TTFT math
+    for r in reqs:
+        assert r.ttft_s is not None and r.ttft_s >= 0
+        assert r.tokens_per_s is not None and r.tokens_per_s > 0
+
+
+def test_disagg_prefill_keeps_slots_free():
+    """A prefill-role engine pauses at admit: it never takes a slot and
+    its handoff queue drains through withdraw_handoff in swap order."""
+    pre = _engine("gdn", role="prefill")
+    reqs = _reqs(2)
+    for r in reqs:
+        pre.submit(r)
+    for _ in range(200):
+        pre.step()
+        if pre.handoffs == 2 and reqs[2].done:
+            break
+    assert pre.handoffs == 2
+    assert pre.free_slots == pre.max_slots
+    assert reqs[2].done                 # admit-boundary finisher
+    rids = [pre.withdraw_handoff().req.rid for _ in range(2)]
+    assert rids == [0, 1]
+    assert pre.withdraw_handoff() is None
+    assert pre.handoffs_out == 2
+
+
+# ======================================================================
+# process-boundary engines (EngineWorker subprocesses)
+# ======================================================================
+@pytest.mark.subprocess
+def test_rpc_disagg_parity():
+    """Two real worker processes (prefill + decode), weights shipped as
+    the init seed: streams bitwise the in-process reference, handoffs
+    cross the pipe, timing stamps survive, shutdown is clean."""
+    cfg, _ = _model("gdn")
+    kw = dict(max_slots=2, max_len=64, decode_block=2, prefill_chunk=8)
+    pre = EngineProxy(cfg, params_seed=0, role="prefill", **kw)
+    dec = EngineProxy(cfg, params_seed=0, role="decode", **kw)
+    try:
+        assert (pre.role, dec.role) == ("prefill", "decode")
+        assert pre.max_len == 64 and pre.max_slots == 2
+        router = Router([pre, dec])
+        reqs = _reqs(3)
+        for r in reqs:
+            router.submit(r)
+        router.run_until_done()
+        assert all(r.done for r in reqs)
+        assert _streams(reqs) == _ref_streams("gdn")
+        m = router.metrics()
+        assert m["handoffs"] == 3
+        assert m["per_engine"][0]["decoded_tokens"] == 0
+        for r in reqs:
+            assert r.ttft_s is not None and r.ttft_s > 0
+            assert r.latency_s is not None and r.latency_s > 0
+    finally:
+        pre.shutdown()
+        dec.shutdown()
+    assert pre.proc.poll() is not None  # workers really exited
+    assert dec.proc.poll() is not None
+
+
+@pytest.mark.subprocess
+def test_rpc_worker_death_rehomes_queued():
+    """Killing a worker mid-run: the router detects EOF on the channel,
+    marks the engine dead, re-homes its still-queued requests to the
+    surviving engine and finishes them; requests whose state lived in
+    the dead process are failed, not hung."""
+    cfg, params = _model("gdn")
+    kw = dict(max_slots=2, max_len=64, decode_block=2, prefill_chunk=8)
+    prox = EngineProxy(cfg, params_seed=0, **kw)
+    local = _engine("gdn")
+    router = Router([prox, local], policy="round_robin")
+    reqs = _reqs(3)
+    for r in reqs:
+        router.submit(r)
+    assert router.placed == [2, 2]
+    prox.proc.kill()
+    with pytest.warns(RuntimeWarning, match="worker died"):
+        done = router.run_until_done()
+    assert router.metrics()["dead"] == [0]
+    assert router.rehomed == 2
+    assert all(r.done for r in reqs)
+    assert len(done) == len(reqs)
+    # a dead proxy raises instead of hanging
+    with pytest.raises(WorkerDied):
+        prox.step()
+
+
+@pytest.mark.subprocess
+def test_rpc_worker_surfaces_engine_errors():
+    """Engine-side exceptions cross the pipe as the matching exception
+    type; the worker stays alive afterwards."""
+    cfg, _ = _model("gdn")
+    prox = EngineProxy(cfg, params_seed=0, role="decode", max_slots=2,
+                       max_len=64, decode_block=2, prefill_chunk=8)
+    try:
+        with pytest.raises(ValueError, match="decode"):
+            prox.submit(Request(rid=0,
+                                prompt=np.arange(4, dtype=np.int32)))
+        assert not prox.dead
+        prox.step()                     # still serving
+        assert prox.metrics()["role"] == "decode"
+    finally:
+        prox.shutdown()
+
+
+# ======================================================================
+# acceptance-adaptive k_draft
+# ======================================================================
+def _spec_engine(kind, *, adversarial, **kw):
+    cfg, params = _model(kind)
+    if adversarial:
+        # random re-init: proposes junk the verify rejects (~1/vocab
+        # acceptance) — the draft model a deployment must survive
+        kw["draft_cfg"] = cfg
+        kw["draft_params"] = lm.init_lm(jax.random.PRNGKey(99), cfg)
+    return _engine(kind, speculative=True, k_draft=4, adaptive_k=True,
+                   **kw)
+
+
+def test_adaptive_k_self_draft_stays_max():
+    eng = _spec_engine("gdn", adversarial=False)
+    reqs = [Request(rid=i, prompt=np.arange(1, 7, dtype=np.int32),
+                    max_new_tokens=24) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    m = eng.metrics()
+    assert m["adaptive_k"] == 1
+    assert m["k_draft_effective"] == 4, (
+        f"self-draft acceptance {m['acceptance_rate']:.2f} must keep "
+        f"k at max, got {m['k_draft_effective']}")
+    assert m["acceptance_rate"] > 0.8
+
+
+def test_adaptive_k_collapses_under_adversarial_draft():
+    """Acceptance collapse drives the effective k to 1 — and the
+    emitted stream is still the non-speculative one (the shared-key
+    verify never emits a wrong token, it just wastes drafts)."""
+    base = _engine("gdn")
+    ref = Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                  max_new_tokens=24)
+    base.submit(ref)
+    base.run_until_done()
+
+    eng = _spec_engine("gdn", adversarial=True)
+    req = Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                  max_new_tokens=24)
+    eng.submit(req)
+    eng.run_until_done()
+    m = eng.metrics()
+    assert m["k_draft_effective"] == 1, (
+        f"acceptance {m['acceptance_rate']:.2f} must collapse k to 1, "
+        f"got {m['k_draft_effective']}")
+    assert m["acceptance_rate"] < 0.5
+    assert list(req.output) == list(ref.output)
+
+
+def test_adaptive_k_off_by_default():
+    eng = _engine("gdn", speculative=True, k_draft=4)
+    assert eng.adaptive_k is False
+    assert eng.metrics()["adaptive_k"] == 0
+    assert eng.metrics()["k_draft_effective"] == 4

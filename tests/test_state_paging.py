@@ -36,7 +36,8 @@ here, per mixer family:
     resume drops its prefetch, ``swap_s`` splits into dispatch vs stall
     and parked time spans gather dispatch -> restore scatter;
   * spill-to-disk: beyond the ``host_swap_bytes`` watermark the coldest
-    dormant image spills to an .npz under ``swap_spool_dir`` and
+    dormant image spills to a wire-encoded ``swap-<rid>.state``
+    under ``swap_spool_dir`` and
     reloads transparently (and bitwise) on resume.
 """
 import os
@@ -848,8 +849,9 @@ def test_router_sums_swap_split_and_migration_waits_for_harvest():
 # -------------------------------------------------------- spill-to-disk
 
 def test_spill_lifecycle(tmp_path):
-    """Beyond the watermark the coldest dormant image spills to an .npz
-    under the spool dir (state leaves host memory), and resume reloads
+    """Beyond the watermark the coldest dormant image spills to a
+    wire-encoded ``swap-<rid>.state`` under the spool dir (state leaves
+    host memory), and resume reloads
     it transparently — the stream is still bitwise the uninterrupted
     one and the spool file is deleted."""
     ref = _ref_streams("gdn", True)
